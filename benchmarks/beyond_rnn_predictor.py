@@ -1,0 +1,57 @@
+"""Beyond-paper: GRU vs ARIMA next-request-time prediction (the paper's
+§VI future work).  Compares mean relative gap-prediction error on three
+synthetic access regimes drawn from the trace model."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.arima import ARIMA, predict_next_timestamp
+from repro.core.rnn_predictor import GRUPredictor, predict_next_timestamp_rnn
+
+
+def _regimes(rng):
+    # near-periodic (cron script), drifting (adaptive poller), bursty (human)
+    n = 80
+    return {
+        "periodic": 3600 + rng.normal(0, 180, n),
+        "drifting": 600 + 8 * np.arange(n) + rng.normal(0, 40, n),
+        "bursty": rng.choice([60.0, 300.0, 3600.0], n,
+                             p=[0.5, 0.3, 0.2]) * rng.lognormal(0, 0.2, n),
+    }
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+    arima = ARIMA()
+    gru = GRUPredictor()
+    for name, gaps in _regimes(rng).items():
+        ts = np.concatenate([[0.0], np.cumsum(gaps)])
+        errs = {"arima": [], "gru": []}
+        t0 = time.time()
+        for i in range(40, len(ts) - 1):
+            hist = ts[: i + 1]
+            true_next = ts[i + 1]
+            span = true_next - ts[i]
+            pa = predict_next_timestamp(hist, arima)
+            pg = predict_next_timestamp_rnn(hist, gru)
+            errs["arima"].append(abs(pa - true_next) / max(span, 1.0))
+            errs["gru"].append(abs(pg - true_next) / max(span, 1.0))
+        us = (time.time() - t0) / max(len(errs["arima"]), 1) * 1e6
+        rows.append(csv_row(
+            f"rnn_vs_arima_{name}", us,
+            f"arima_relerr={np.mean(errs['arima']):.3f}"
+            f";gru_relerr={np.mean(errs['gru']):.3f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

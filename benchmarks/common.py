@@ -1,0 +1,53 @@
+"""Shared benchmark infrastructure: traces, memoized simulator runs."""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core import SimConfig, make_trace, run_strategy
+from repro.core.trace import GAGE_PROFILE, OOI_PROFILE
+
+SCALE = {"ooi": 0.12, "gage": 0.25}
+PROFILES = {"ooi": OOI_PROFILE, "gage": GAGE_PROFILE}
+STRATEGIES = ("no_cache", "cache_only", "md1", "md2", "hpm")
+
+# cache sizes per trace (paper §V-A4, scaled to the synthetic traces'
+# footprint: the paper's 128GB..10TB OOI ladder spans tiny→whole-dataset;
+# ours spans the same ratios)
+CACHE_SIZES = {
+    "ooi": [(128, 64 << 20), (256, 128 << 20), (512, 256 << 20),
+            (1024, 1 << 30), (10240, 64 << 30)],
+    "gage": [(32, 16 << 20), (64, 32 << 20), (128, 64 << 20),
+             (256, 128 << 20), (10240, 64 << 30)],
+}
+
+
+@functools.lru_cache(maxsize=4)
+def get_split(trace: str, seed: int = 0):
+    tr = make_trace(trace, seed=seed, scale=SCALE[trace])
+    split = int(len(tr) * 0.3)
+    return tuple(tr[:split]), tuple(tr[split:])
+
+
+@functools.lru_cache(maxsize=256)
+def sim(trace: str, strategy: str, cache_bytes: int = 1 << 30,
+        policy: str = "lru", bandwidth_scale: float = 1.0,
+        traffic_scale: float = 1.0, placement: bool = True, seed: int = 0):
+    """Memoized simulator run; returns (SimResult, wall_s)."""
+    train, test = get_split(trace, seed)
+    profile = PROFILES[trace]
+    cfg = SimConfig(
+        cache_bytes=cache_bytes,
+        cache_policy=policy,
+        bandwidth_scale=bandwidth_scale,
+        traffic_scale=traffic_scale,
+        enable_placement=placement,
+        stream_rate_bytes_per_s=profile.bytes_per_second_stream,
+    ).calibrate_origin(list(test))
+    t0 = time.time()
+    res = run_strategy(strategy, list(test), profile.grid, cfg, list(train))
+    return res, time.time() - t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,28 @@
+"""Figure 13: fraction of requested bytes served by the local DTN, split
+into cached vs pre-fetched, per strategy (smallest + largest cache)."""
+from __future__ import annotations
+
+from benchmarks.common import CACHE_SIZES, STRATEGIES, csv_row, sim
+
+
+def run() -> list[str]:
+    rows = []
+    for trace in ("ooi", "gage"):
+        for label_gb, size in (CACHE_SIZES[trace][0], CACHE_SIZES[trace][-1]):
+            for strat in STRATEGIES[1:]:          # cache-carrying strategies
+                res, _ = sim(trace, strat, cache_bytes=size)
+                cached, pref = res.local_access_frac
+                rows.append(csv_row(
+                    f"fig13_{trace}_{label_gb}GB_{strat}", 0.0,
+                    f"cached={cached:.3f};prefetched={pref:.3f}"
+                    f";local_total={cached + pref:.3f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

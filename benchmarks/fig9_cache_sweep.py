@@ -1,0 +1,31 @@
+"""Figures 9-12: throughput / latency / recall vs cache size, for LRU and
+LFU, for both traces, across all five strategies."""
+from __future__ import annotations
+
+from benchmarks.common import CACHE_SIZES, STRATEGIES, csv_row, sim
+
+
+def run(traces=("ooi", "gage"), policies=("lru", "lfu")) -> list[str]:
+    rows = []
+    for trace in traces:
+        for policy in policies:
+            for label_gb, size in CACHE_SIZES[trace]:
+                for strat in STRATEGIES:
+                    res, wall = sim(trace, strat, cache_bytes=size,
+                                    policy=policy)
+                    us = wall / max(res.total_requests, 1) * 1e6
+                    rows.append(csv_row(
+                        f"fig9_{trace}_{policy}_{label_gb}GB_{strat}", us,
+                        f"thr_mbps={res.mean_throughput_mbps:.1f}"
+                        f";lat_s={res.mean_latency_s:.2f}"
+                        f";recall={res.recall:.3f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline report: renders the per-(arch × shape × mesh) table from
+``dryrun_results.json`` (run ``python -m repro.launch.dryrun --all`` first).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def run() -> list[str]:
+    rows = []
+    files = [("base", RESULTS),
+             ("opt", "dryrun_results_optimized.json")]
+    any_found = False
+    for tag, path in files:
+        try:
+            with open(path) as f:
+                results = json.load(f)
+        except FileNotFoundError:
+            continue
+        any_found = True
+        for key in sorted(results):
+            v = results[key]
+            name = f"roofline_{tag}_{key.replace('|', '_')}"
+            if not v.get("ok"):
+                rows.append(csv_row(name, 0.0,
+                                    f"FAILED:{v.get('error', '?')[:60]}"))
+                continue
+            if v["mesh"] != "single":
+                continue       # roofline table is single-pod (brief)
+            rows.append(csv_row(
+                name, 0.0,
+                f"t_comp={v['t_compute_s']:.3e};t_mem={v['t_memory_s']:.3e}"
+                f";t_coll={v['t_collective_s']:.3e};dom={v['dominant']}"
+                f";frac={v.get('roofline_fraction', 0):.3f}"
+                f";useful={v.get('useful_flops_ratio', 0):.3f}"))
+    if not any_found:
+        return [csv_row("roofline_missing", 0.0,
+                        "run `python -m repro.launch.dryrun --all` first")]
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Heavy simulator runs are
+memoized across tables (same config -> one run).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced fig9 sweep; skip the table5 grid")
+    args = ap.parse_args()
+
+    from benchmarks import (beyond_rnn_predictor, fig9_cache_sweep,
+                            fig13_local_access, roofline_report,
+                            table1_users, table2_requests,
+                            table3_origin_load, table4_placement,
+                            table5_conditions)
+
+    sections = [
+        ("Table I (user classes)", table1_users.run, {}),
+        ("Table II (request types)", table2_requests.run, {}),
+    ]
+    if args.quick:
+        sections += [
+            ("Figs 9-12 (cache sweep, reduced)", fig9_cache_sweep.run,
+             {"traces": ("ooi",), "policies": ("lru",)}),
+        ]
+    else:
+        sections += [
+            ("Figs 9-12 (cache sweep)", fig9_cache_sweep.run, {}),
+            ("Table V (network x traffic)", table5_conditions.run, {}),
+        ]
+    sections += [
+        ("Table III (origin load)", table3_origin_load.run, {}),
+        ("Table IV (placement)", table4_placement.run, {}),
+        ("Fig 13 (local access)", fig13_local_access.run, {}),
+        ("Beyond-paper: GRU vs ARIMA predictor", beyond_rnn_predictor.run, {}),
+        ("Roofline (from dry-run)", roofline_report.run, {}),
+    ]
+
+    print("name,us_per_call,derived")
+    t_total = time.time()
+    for title, fn, kw in sections:
+        print(f"# --- {title} ---")
+        t0 = time.time()
+        try:
+            for row in fn(**kw):
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            print(f"# ERROR in {title}: {type(e).__name__}: {e}")
+        print(f"# ({title}: {time.time() - t0:.1f}s)")
+        sys.stdout.flush()
+    print(f"# total: {time.time() - t_total:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table I: human/program user split and data-volume split."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, csv_row
+from repro.core import make_trace, summarize_trace
+
+PAPER = {
+    "ooi": {"hu_users": 0.867, "pu_users": 0.133, "hu_vol": 0.099,
+            "pu_vol": 0.901},
+    "gage": {"hu_users": 0.941, "pu_users": 0.059, "hu_vol": 0.094,
+             "pu_vol": 0.906},
+}
+
+
+def run() -> list[str]:
+    rows = []
+    for trace in ("ooi", "gage"):
+        t0 = time.time()
+        tr = make_trace(trace, seed=0, scale=SCALE[trace])
+        s = summarize_trace(tr)
+        us = (time.time() - t0) / max(len(tr), 1) * 1e6
+        p = PAPER[trace]
+        rows.append(csv_row(
+            f"table1_{trace}", us,
+            f"hu_users={s.human_user_frac:.3f}(paper {p['hu_users']})"
+            f";pu_vol={s.program_volume_frac:.3f}(paper {p['pu_vol']})"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table II: per-type data-transfer volume mix + fresh/duplicate split of
+overlapping transfers."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, csv_row
+from repro.core import make_trace, summarize_trace
+
+PAPER = {
+    "ooi": {"regular": 0.138, "realtime": 0.257, "overlapping": 0.608,
+            "dup": 0.904},
+    "gage": {"regular": 0.772, "realtime": 0.061, "overlapping": 0.172,
+             "dup": 0.896},
+}
+
+
+def run() -> list[str]:
+    rows = []
+    for trace in ("ooi", "gage"):
+        t0 = time.time()
+        tr = make_trace(trace, seed=0, scale=SCALE[trace])
+        s = summarize_trace(tr)
+        us = (time.time() - t0) / max(len(tr), 1) * 1e6
+        p = PAPER[trace]
+        mix = s.type_volume_frac
+        rows.append(csv_row(
+            f"table2_{trace}", us,
+            f"reg={mix.get('regular', 0):.3f}({p['regular']})"
+            f";rt={mix.get('realtime', 0):.3f}({p['realtime']})"
+            f";ovl={mix.get('overlapping', 0):.3f}({p['overlapping']})"
+            f";dup={s.overlap_duplicate_frac:.3f}({p['dup']})"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Table III: normalized number of requests served by the observatory."""
+from __future__ import annotations
+
+from benchmarks.common import STRATEGIES, csv_row, sim
+
+
+def run() -> list[str]:
+    rows = []
+    for trace in ("ooi", "gage"):
+        for policy in ("lru", "lfu"):
+            vals = []
+            for strat in STRATEGIES:
+                res, wall = sim(trace, strat, policy=policy)
+                vals.append(f"{strat}={res.normalized_origin_requests:.4f}")
+            rows.append(csv_row(f"table3_{trace}_{policy}", 0.0,
+                                ";".join(vals)))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

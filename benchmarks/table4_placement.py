@@ -1,0 +1,37 @@
+"""Table IV: impact of the data placement strategy (virtual groups + local
+data hubs) — HPM + LRU on the GAGE trace, placement on vs off."""
+from __future__ import annotations
+
+from benchmarks.common import CACHE_SIZES, csv_row, sim
+
+
+def run() -> list[str]:
+    rows = []
+    for label_gb, size in CACHE_SIZES["gage"][:4]:
+        on, _ = sim("gage", "hpm", cache_bytes=size, placement=True)
+        off, _ = sim("gage", "hpm", cache_bytes=size, placement=False)
+
+        def peer_thr(res):
+            b = sum(o.peer_bytes for o in res.outcomes)
+            t = sum(o.peer_time for o in res.outcomes)
+            return b * 8 / t / 1e6 if t > 0 else 0.0
+
+        pt_on, pt_off = peer_thr(on), peer_thr(off)
+        peer_delta = (pt_on / max(pt_off, 1e-9) - 1) * 100
+        thr_delta = (on.mean_throughput_mbps / max(off.mean_throughput_mbps,
+                                                   1e-9) - 1) * 100
+        rows.append(csv_row(
+            f"table4_gage_{label_gb}GB", 0.0,
+            f"peer_thr_on={pt_on:.1f};peer_thr_off={pt_off:.1f}"
+            f";peer_delta_pct={peer_delta:.2f}"
+            f";total_delta_pct={thr_delta:.2f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

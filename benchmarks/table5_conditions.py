@@ -1,0 +1,32 @@
+"""Table V: throughput under {best, medium, worst} network × {low, regular,
+heavy} traffic for every strategy (OOI + GAGE, LRU)."""
+from __future__ import annotations
+
+from benchmarks.common import STRATEGIES, csv_row, sim
+
+NETWORK = {"best": 1.0, "medium": 0.5, "worst": 0.01}
+TRAFFIC = {"low": 0.5, "regular": 1.0, "heavy": 4.0}
+
+
+def run(traces=("ooi", "gage")) -> list[str]:
+    rows = []
+    for trace in traces:
+        for net, bw in NETWORK.items():
+            for tr, ts in TRAFFIC.items():
+                vals = []
+                for strat in STRATEGIES:
+                    res, _ = sim(trace, strat, bandwidth_scale=bw,
+                                 traffic_scale=ts)
+                    vals.append(f"{strat}={res.mean_throughput_mbps:.1f}")
+                rows.append(csv_row(f"table5_{trace}_{net}_{tr}", 0.0,
+                                    ";".join(vals)))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

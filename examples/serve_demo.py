@@ -1,0 +1,51 @@
+"""Serving demo: batched requests against a small model, showing the
+HPM-driven prefill prewarming (paper real-time subscriptions → serving).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_reduced_config("gemma3-27b")     # windowed-attention family
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, max_len=128)
+
+    rng = np.random.default_rng(0)
+    # two recurring "program" clients (period 30 s) + ad-hoc "human" ones
+    now = 0.0
+    ttfts_cold, ttfts_warm = [], []
+    for step in range(8):
+        for client in (1, 2):
+            prompt = (np.arange(32) * (client + 2)) % cfg.vocab
+            comp = engine.serve(Request(step * 10 + client, client, now,
+                                        prompt, max_new_tokens=8), now)
+            (ttfts_warm if comp.prefetched else ttfts_cold).append(comp.ttft)
+        # ad-hoc client with random prompt (never prewarmed)
+        prompt = rng.integers(0, cfg.vocab, size=32)
+        comp = engine.serve(Request(step * 10 + 9, 100 + step, now, prompt,
+                                    max_new_tokens=8), now)
+        ttfts_cold.append(comp.ttft)
+        now += 30.0
+
+    print(f"completions: {engine.stats['total']}, "
+          f"prewarmed prefills: {engine.stats['prefetched_prefills']}")
+    if ttfts_warm:
+        print(f"mean TTFT cold {np.mean(ttfts_cold)*1e3:.1f} ms vs "
+              f"prewarmed {np.mean(ttfts_warm)*1e3:.1f} ms")
+    assert engine.stats["prefetched_prefills"] > 0, \
+        "recurring clients should get prewarmed prefills"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import sys
+import time
+
+import jax
+from jax.sharding import NamedSharding
+
+sys.path.insert(0, "src")
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import batch_spec, param_shardings
+from repro.launch.specs import train_input_specs
+from repro.models.transformer import init_params, loss_fn
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "yi-6b"
+cfg = dataclasses.replace(get_config(arch), scan_units=False)
+shape = SHAPES["train_4k"]
+mesh = make_production_mesh()
+pshapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+pshard = param_shardings(pshapes, mesh)
+ocfg = AdamWConfig()
+oshapes = jax.eval_shape(lambda p: adamw_init(p, ocfg), pshapes)
+oshard = param_shardings(oshapes, mesh)
+bspecs = train_input_specs(cfg, shape)
+bshard = {k: NamedSharding(mesh, batch_spec(mesh, v.ndim))
+          for k, v in bspecs.items()}
+
+
+def train_step(params, opt_state, batch):
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    np_, no, g = adamw_update(grads, opt_state, params, ocfg)
+    return np_, no, loss
+
+
+t0 = time.time()
+with mesh:
+    lowered = jax.jit(train_step, in_shardings=(pshard, oshard, bshard),
+                      out_shardings=(pshard, oshard, None),
+                      donate_argnums=(0, 1)).lower(pshapes, oshapes, bspecs)
+    print("lower time", round(time.time() - t0, 1), flush=True)
+    t0 = time.time()
+    compiled = lowered.compile()
+    print("compile time", round(time.time() - t0, 1), flush=True)
+mem = compiled.memory_analysis()
+cost = compiled.cost_analysis()
+print("flops=%.4e" % cost["flops"], "bytes=%.4e" % cost.get("bytes accessed", 0))
+print("temp GiB", mem.temp_size_in_bytes / 2**30,
+      "args GiB", mem.argument_size_in_bytes / 2**30)

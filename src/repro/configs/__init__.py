@@ -1,0 +1,7 @@
+"""Architecture config registry.  Import side-effects register all archs."""
+from repro.configs import dense_lms, hybrid_ssm, moe_lms, multimodal  # noqa: F401
+from repro.configs.base import (LONG_CONTEXT_ARCHS, SHAPES, ShapeSpec, cells,
+                                get_config, get_reduced_config, list_archs)
+
+__all__ = ["LONG_CONTEXT_ARCHS", "SHAPES", "ShapeSpec", "cells",
+           "get_config", "get_reduced_config", "list_archs"]

@@ -1,0 +1,22 @@
+"""Core: the paper's push-based data delivery framework (faithful layer).
+
+Public API re-exports.
+"""
+from repro.core.arima import ARIMA, ARIMAOrder, predict_next_timestamp
+from repro.core.cache import LFUCache, LRUCache, chunks_for_range, make_cache
+from repro.core.classify import (classify_request_type, classify_users,
+                                 fresh_duplicate_bytes, summarize_trace)
+from repro.core.delivery import (HPMAdapter, MD1Adapter, MD2Adapter,
+                                 NoPrefetch, make_prefetcher)
+from repro.core.fpgrowth import RulePredictor, association_rules, frequent_itemsets
+from repro.core.hpm import HybridPrefetcher, PrefetchOp, build_rule_transactions
+from repro.core.kmeans import kmeans
+from repro.core.markov import MarkovPredictor
+from repro.core.mining import MeshRulePredictor
+from repro.core.placement import PlacementEngine, select_hub
+from repro.core.simulator import SimConfig, SimResult, VDCSimulator, run_strategy
+from repro.core.streaming import StreamingEngine
+from repro.core.trace import (GAGE_PROFILE, OOI_PROFILE, ObjectGrid, Request,
+                              TraceGenerator, make_trace)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

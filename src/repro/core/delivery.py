@@ -1,0 +1,124 @@
+"""Push-based delivery framework: prefetcher adapters (paper §IV, §V-A2).
+
+The simulator (:mod:`repro.core.simulator`) drives one of these adapters.
+Each adapter observes the request stream arriving at the server-side DTN and
+emits :class:`repro.core.hpm.PrefetchOp` plans.  Adapters:
+
+- ``NoPrefetch``       — cache-only baseline ("Cache Only") or no-cache.
+- ``HPMAdapter``       — the paper's hybrid model (history + rules + stream).
+- ``MD1Adapter``       — Li et al. Markov popularity model (all requests).
+- ``MD2Adapter``       — Xiong et al. mesh association rules + ARIMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Sequence
+
+from repro.core.hpm import HybridPrefetcher, PrefetchOp, build_rule_transactions
+from repro.core.markov import MarkovPredictor
+from repro.core.mining import MeshRulePredictor
+from repro.core.streaming import StreamingEngine
+from repro.core.trace import ObjectGrid, Request
+
+
+class Prefetcher(Protocol):
+    name: str
+
+    def observe(self, r: Request) -> list[PrefetchOp]: ...
+
+
+class NoPrefetch:
+    name = "none"
+
+    def observe(self, r: Request) -> list[PrefetchOp]:
+        return []
+
+
+class HPMAdapter:
+    """The paper's Hybrid Pre-fetching Model."""
+
+    name = "hpm"
+
+    def __init__(self, training_requests: Sequence[Request] | None = None,
+                 min_support: int = 30, min_confidence: float = 0.5,
+                 offset: float = 0.8):
+        txs = build_rule_transactions(training_requests) if training_requests else None
+        self.model = HybridPrefetcher(
+            rule_transactions=txs, min_support=min_support,
+            min_confidence=min_confidence, offset=offset,
+        )
+        self.streaming = StreamingEngine()
+
+    def observe(self, r: Request) -> list[PrefetchOp]:
+        ops = self.model.observe(r)
+        out = []
+        for op in ops:
+            if op.reason == "stream":
+                period = max(1.0, op.tr_end - op.tr_start)
+                self.streaming.subscribe(r.user_id, r.continent + 1, r.obj,
+                                         period, r.ts)
+            else:
+                out.append(op)
+        return out
+
+
+class MD1Adapter:
+    """Li et al. Markov popularity model.  Object prediction is a Markov
+    chain over the location access path + popularity; Li et al. pre-fetch
+    *on access* (no temporal model — that is MD2's and HPM's edge)."""
+
+    name = "md1"
+
+    def __init__(self, grid: ObjectGrid,
+                 training_requests: Sequence[Request] | None = None,
+                 top_n: int = 3):
+        self.model = MarkovPredictor(grid)
+        if training_requests:
+            self.model.fit(training_requests)
+        self.top_n = top_n
+
+    def observe(self, r: Request) -> list[PrefetchOp]:
+        objs = self.model.predict_next_objs(r, self.top_n)
+        self.model.observe(r)
+        width = max(1.0, r.tr_end - r.tr_start)
+        # prefetch-on-access: most recent `width` of the predicted objects
+        return [
+            PrefetchOp(r.ts, r.user_id, obj, r.ts - width, r.ts, "markov")
+            for obj in objs
+        ]
+
+
+class MD2Adapter:
+    name = "md2"
+
+    def __init__(self, grid: ObjectGrid,
+                 training_requests: Sequence[Request] | None = None,
+                 top_n: int = 3):
+        self.model = MeshRulePredictor(grid)
+        if training_requests:
+            self.model.fit(training_requests)
+        self.top_n = top_n
+
+    def observe(self, r: Request) -> list[PrefetchOp]:
+        plan = self.model.predict(r, self.top_n)
+        self.model.observe(r)
+        # issue at the same offset fraction of the predicted gap as HPM
+        out = []
+        for obj, ts, s, e in plan:
+            issue = r.ts + 0.8 * max(0.0, ts - r.ts)
+            out.append(PrefetchOp(issue, r.user_id, obj, s, e, "mining"))
+        return out
+
+
+def make_prefetcher(kind: str, grid: ObjectGrid,
+                    training_requests: Sequence[Request] | None = None):
+    kind = kind.lower()
+    if kind in ("none", "cache_only", "no_cache"):
+        return NoPrefetch()
+    if kind == "hpm":
+        return HPMAdapter(training_requests)
+    if kind == "md1":
+        return MD1Adapter(grid, training_requests)
+    if kind == "md2":
+        return MD2Adapter(grid, training_requests)
+    raise ValueError(f"unknown prefetcher: {kind}")

@@ -1,0 +1,190 @@
+"""Hybrid Pre-fetching Model (HPM) — the paper's §IV-A.
+
+Routes each user's request stream to the appropriate predictor:
+
+- **program users** (repetition detected ≥ REPEAT_THRESHOLD times within the
+  LEARNING_PERIOD): *history-based* model — ARIMA over the user's request
+  timestamps predicts ``ts_{i+1}``; data is pre-fetched at
+  ``ts_i + offset · (ts_{i+1} − ts_i)`` (offset = 0.8) for the user's
+  repeated object set, with the requested time-range advanced like a moving
+  window.
+- **real-time users** (period ≤ 120 s): handed to the *streaming* mechanism
+  (see :mod:`repro.core.streaming`) — subscribe once, push every new chunk.
+- **human / unclassified**: *association-rule* model — FP-Growth rules
+  (support=30, confidence=0.5) predict the next objects; only the top n=3 are
+  pre-fetched; ``ts_{i+1} = ts_i + (ts_i − ts_{i−1})``, ``tr_{i+1} = tr_i``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.arima import ARIMA, predict_next_timestamp
+from repro.core.classify import REALTIME_PERIOD
+from repro.core.fpgrowth import RulePredictor
+from repro.core.trace import WEEK, Request
+
+LEARNING_PERIOD = WEEK
+REPEAT_THRESHOLD = 3
+PREFETCH_OFFSET = 0.8
+TOP_N_HUMAN = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchOp:
+    """One planned pre-fetch: push (obj, [tr_start, tr_end]) toward user at
+    time ``issue_ts``."""
+
+    issue_ts: float
+    user_id: int
+    obj: int
+    tr_start: float
+    tr_end: float
+    reason: str      # "history" | "rules" | "stream"
+
+
+@dataclasses.dataclass
+class _UserState:
+    timestamps: list[float] = dataclasses.field(default_factory=list)
+    objs: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter
+    )
+    recent_objs: list[int] = dataclasses.field(default_factory=list)
+    last_window: float = 0.0
+    first_ts: float = 0.0
+    pattern_repeats: int = 0
+    classified: str = "unknown"     # unknown | program | realtime | human
+    last_cycle_objs: frozenset = frozenset()
+    cycle_objs: set = dataclasses.field(default_factory=set)
+    cycle_start: float = 0.0
+
+
+class HybridPrefetcher:
+    """Online HPM: observe requests one at a time, emit pre-fetch plans."""
+
+    def __init__(
+        self,
+        rule_transactions: Sequence[Sequence[int]] | None = None,
+        min_support: int = 30,
+        min_confidence: float = 0.5,
+        offset: float = PREFETCH_OFFSET,
+        arima_history: int = 60,
+    ):
+        self.offset = offset
+        self.arima = ARIMA(n=arima_history)
+        self.users: dict[int, _UserState] = collections.defaultdict(_UserState)
+        self.rule_predictor = (
+            RulePredictor(rule_transactions, min_support, min_confidence)
+            if rule_transactions
+            else None
+        )
+        self.realtime_subscriptions: set[tuple[int, int]] = set()  # (user, obj)
+
+    # -- online classification (paper §IV-A2) -------------------------------
+
+    def _update_classification(self, st: _UserState, r: Request) -> None:
+        if not st.timestamps:
+            st.first_ts = r.ts
+            st.cycle_start = r.ts
+        st.timestamps.append(r.ts)
+        if len(st.timestamps) > 200:
+            del st.timestamps[:100]
+        st.objs[r.obj] += 1
+        st.recent_objs.append(r.obj)
+        if len(st.recent_objs) > 16:
+            del st.recent_objs[0]
+        st.last_window = r.tr_end - r.tr_start
+
+        if st.classified in ("program", "realtime"):
+            return
+        # repetition detection: did the user re-request the same object set?
+        st.cycle_objs.add(r.obj)
+        if st.last_cycle_objs and r.obj in st.last_cycle_objs and \
+                st.cycle_objs >= st.last_cycle_objs:
+            st.pattern_repeats += 1
+            st.last_cycle_objs = frozenset(st.cycle_objs)
+            st.cycle_objs = set()
+        elif not st.last_cycle_objs and len(st.timestamps) >= 2 and \
+                r.obj in st.cycle_objs and len(st.cycle_objs) >= 1:
+            st.last_cycle_objs = frozenset(st.cycle_objs)
+            st.cycle_objs = set()
+        if st.pattern_repeats >= REPEAT_THRESHOLD and \
+                (r.ts - st.first_ts) <= LEARNING_PERIOD * 2:
+            gaps = np.diff(np.array(sorted(set(st.timestamps))[-12:]))
+            period = float(np.median(gaps)) if gaps.size else float("inf")
+            st.classified = "realtime" if period <= REALTIME_PERIOD else "program"
+        elif (r.ts - st.first_ts) > LEARNING_PERIOD and st.pattern_repeats == 0:
+            st.classified = "human"
+
+    # -- prediction ----------------------------------------------------------
+
+    def observe(self, r: Request) -> list[PrefetchOp]:
+        """Feed one request; return pre-fetch ops to schedule now."""
+        st = self.users[r.user_id]
+        self._update_classification(st, r)
+        if st.classified == "realtime":
+            key = (r.user_id, r.obj)
+            if key not in self.realtime_subscriptions:
+                self.realtime_subscriptions.add(key)
+                # streaming engine takes over; no per-request prefetch needed
+                return [
+                    PrefetchOp(r.ts, r.user_id, r.obj, r.tr_end,
+                               r.tr_end + st.last_window, "stream")
+                ]
+            return []
+        if st.classified == "program":
+            return self._predict_history(st, r)
+        if st.classified == "human":
+            return self._predict_rules(st, r)
+        return []   # still learning
+
+    def _predict_history(self, st: _UserState, r: Request) -> list[PrefetchOp]:
+        ts_hist = np.array(sorted(set(st.timestamps)))
+        if ts_hist.size < 4:
+            return []
+        next_ts = predict_next_timestamp(ts_hist, self.arima)
+        issue = r.ts + self.offset * max(0.0, next_ts - r.ts)
+        ops = []
+        width = st.last_window
+        # pre-fetch the user's whole repeated object set, window advanced
+        objs = st.last_cycle_objs or {r.obj}
+        for obj in sorted(objs):
+            ops.append(
+                PrefetchOp(issue, r.user_id, int(obj),
+                           next_ts - width, next_ts, "history")
+            )
+        return ops
+
+    def _predict_rules(self, st: _UserState, r: Request) -> list[PrefetchOp]:
+        if self.rule_predictor is None:
+            return []
+        preds = self.rule_predictor.predict(st.recent_objs, top_n=TOP_N_HUMAN)
+        if not preds:
+            return []
+        ts = st.timestamps
+        gap = (ts[-1] - ts[-2]) if len(ts) >= 2 else 300.0
+        next_ts = r.ts + gap
+        # paper: tr_{i+1} = tr_i (identical range to the last request)
+        return [
+            PrefetchOp(r.ts, r.user_id, int(obj), r.tr_start, r.tr_end, "rules")
+            for obj in preds
+        ]
+
+    # convenience ------------------------------------------------------------
+
+    def classification(self, user_id: int) -> str:
+        return self.users[user_id].classified if user_id in self.users else "unknown"
+
+
+def build_rule_transactions(
+    requests: Iterable[Request], session_seconds: float = 3600.0
+) -> list[list[int]]:
+    """Sessionize a training trace into transactions for FP-Growth: the
+    objects a user co-accesses within one session window."""
+    sessions: dict[tuple[int, int], list[int]] = collections.defaultdict(list)
+    for r in requests:
+        sessions[(r.user_id, int(r.ts // session_seconds))].append(r.obj)
+    return [list(dict.fromkeys(v)) for v in sessions.values()]

@@ -1,0 +1,69 @@
+"""K-Means (Lloyd's algorithm) in JAX — used for virtual-group clustering
+(paper §IV-C2).
+
+Shape-static, jit-compiled; k-means++ style seeding done with numpy for
+simplicity (host-side control), Lloyd iterations on device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=8)
+def _compiled_lloyd(n: int, dim: int, k: int, iters: int):
+    def lloyd(x: jnp.ndarray, centers0: jnp.ndarray):
+        def step(centers, _):
+            # assignment
+            d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+            assign = jnp.argmin(d2, axis=1)
+            one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+            counts = one_hot.sum(axis=0)
+            sums = one_hot.T @ x
+            new_centers = sums / jnp.maximum(counts[:, None], 1.0)
+            # keep empty clusters where they were
+            new_centers = jnp.where(counts[:, None] > 0, new_centers, centers)
+            return new_centers, None
+
+        centers, _ = jax.lax.scan(step, centers0, None, length=iters)
+        d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, axis=-1)
+        assign = jnp.argmin(d2, axis=1)
+        inertia = jnp.sum(jnp.min(d2, axis=1))
+        return centers, assign, inertia
+
+    return jax.jit(lloyd)
+
+
+def _kmeanspp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    n = x.shape[0]
+    centers = [x[rng.integers(n)]]
+    for _ in range(1, k):
+        d2 = np.min(
+            [np.sum((x - c) ** 2, axis=1) for c in centers], axis=0
+        )
+        if d2.sum() <= 0:
+            centers.append(x[rng.integers(n)])
+            continue
+        probs = d2 / d2.sum()
+        centers.append(x[rng.choice(n, p=probs)])
+    return np.stack(centers)
+
+
+def kmeans(
+    x: np.ndarray, k: int, iters: int = 25, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray, float]:
+    """Cluster rows of x into k groups.
+
+    Returns (centers [k, dim], assignments [n], inertia).
+    """
+    x = np.asarray(x, dtype=np.float32)
+    n, dim = x.shape
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    centers0 = _kmeanspp_init(x, k, rng)
+    fn = _compiled_lloyd(n, dim, k, iters)
+    centers, assign, inertia = fn(jnp.asarray(x), jnp.asarray(centers0))
+    return np.asarray(centers), np.asarray(assign), float(inertia)

@@ -1,0 +1,135 @@
+"""GRU-based next-request-time predictor — the paper's own stated future
+work (§VI: "replacing the ARIMA time-series prediction model with the
+portable RNN based predictor [65]").
+
+A small GRU is fit per request stream on the normalized inter-arrival gap
+series (same CSS objective as the ARIMA fit, same bucketed static shapes so
+the jit cache stays bounded).  Drop-in replacement for
+:func:`repro.core.arima.predict_next_timestamp`; compared against ARIMA in
+``benchmarks/beyond_rnn_predictor.py`` and ``tests/test_rnn_predictor.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIDDEN = 12
+
+
+def _gru_cell(params, h, x_t):
+    z = jax.nn.sigmoid(params["wz"] @ h + params["uz"] * x_t + params["bz"])
+    r = jax.nn.sigmoid(params["wr"] @ h + params["ur"] * x_t + params["br"])
+    c = jnp.tanh(params["wc"] @ (r * h) + params["uc"] * x_t + params["bc"])
+    return (1 - z) * h + z * c
+
+
+def _init_params(key, hidden: int = HIDDEN):
+    ks = jax.random.split(key, 7)
+    g = lambda k, shape: jax.random.normal(k, shape, jnp.float32) * 0.3
+    return {
+        "wz": g(ks[0], (hidden, hidden)), "uz": g(ks[1], (hidden,)),
+        "bz": jnp.zeros((hidden,)),
+        "wr": g(ks[2], (hidden, hidden)), "ur": g(ks[3], (hidden,)),
+        "br": jnp.zeros((hidden,)),
+        "wc": g(ks[4], (hidden, hidden)), "uc": g(ks[5], (hidden,)),
+        "bc": jnp.zeros((hidden,)),
+        "wo": g(ks[6], (hidden,)), "bo": jnp.zeros(()),
+    }
+
+
+def _predict_series(params, y):
+    """One-step-ahead predictions over y (normalized gaps)."""
+    def step(h, x_t):
+        h = _gru_cell(params, h, x_t)
+        pred = jnp.dot(params["wo"], h) + params["bo"]
+        return h, pred
+
+    h0 = jnp.zeros((HIDDEN,), jnp.float32)
+    h_last, preds = jax.lax.scan(step, h0, y)
+    # preds[t] = prediction of y[t+1] given y[..t]
+    return preds, h_last
+
+
+@functools.lru_cache(maxsize=16)
+def _compiled_fit(n: int, steps: int, lr: float):
+    def loss_fn(params, y):
+        preds, _ = _predict_series(params, y)
+        err = preds[:-1] - y[1:]
+        return jnp.mean(err * err)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def fit(y_raw, key):
+        mu = jnp.mean(y_raw)
+        sd = jnp.maximum(jnp.std(y_raw), 1e-8)
+        y = (y_raw - mu) / sd
+        params = _init_params(key)
+
+        def adam(carry, _):
+            p, m, v, t = carry
+            loss, g = grad_fn(p, y)
+            t = t + 1
+            m = jax.tree_util.tree_map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree_util.tree_map(lambda a, b: 0.999 * a + 0.001 * b * b,
+                                       v, g)
+            def upd(p_, m_, v_):
+                mh = m_ / (1 - 0.9 ** t)
+                vh = v_ / (1 - 0.999 ** t)
+                return p_ - lr * mh / (jnp.sqrt(vh) + 1e-8)
+            p = jax.tree_util.tree_map(upd, p, m, v)
+            return (p, m, v, t), loss
+
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        (params, _, _, _), losses = jax.lax.scan(
+            adam, (params, zeros, zeros, 0.0), None, length=steps)
+        preds, h_last = _predict_series(params, y)
+        # next-step forecast from the final hidden state
+        forecast = (preds[-1] * sd + mu)
+        return forecast, losses[-1]
+
+    return jax.jit(fit)
+
+
+class GRUPredictor:
+    """Per-stream GRU gap predictor (drop-in for ARIMA.forecast_next)."""
+
+    def __init__(self, n: int = 60, steps: int = 150, lr: float = 0.03,
+                 seed: int = 0):
+        self.n = n
+        self.steps = steps
+        self.lr = lr
+        self.key = jax.random.PRNGKey(seed)
+
+    def forecast_next(self, series: np.ndarray) -> float:
+        series = np.asarray(series, dtype=np.float32)
+        if series.size < 4:
+            return float(series[-1]) if series.size else 0.0
+        buckets = [b for b in (4, 8, 16, 32, self.n)
+                   if b <= min(series.size, self.n)]
+        n = buckets[-1]
+        y = series[-n:]
+        fit = _compiled_fit(n, self.steps, self.lr)
+        out, _ = fit(jnp.asarray(y), self.key)
+        val = float(out)
+        if not np.isfinite(val):
+            val = float(np.median(y))
+        return val
+
+
+def predict_next_timestamp_rnn(timestamps: np.ndarray,
+                               model: GRUPredictor | None = None) -> float:
+    """RNN analogue of :func:`repro.core.arima.predict_next_timestamp`."""
+    timestamps = np.asarray(timestamps, dtype=np.float64)
+    if timestamps.size < 2:
+        return float(timestamps[-1]) if timestamps.size else 0.0
+    gaps = np.diff(timestamps)
+    med = float(np.median(gaps))
+    if med > 0 and float(np.std(gaps)) / med < 0.02:
+        return float(timestamps[-1] + med)
+    model = model or GRUPredictor()
+    gap = model.forecast_next(gaps.astype(np.float32))
+    gap = float(np.clip(gap, 0.0, 10 * np.max(gaps)))
+    return float(timestamps[-1] + gap)

@@ -1,0 +1,347 @@
+"""Request/trace data model and calibrated synthetic OOI/GAGE trace generators.
+
+The paper analyses two access traces (OOI: 17.9M requests / Nov 2018; GAGE:
+77.8M requests / 2018).  Those traces are not redistributable, so this module
+generates synthetic traces *calibrated to every statistic the paper publishes*:
+
+- Table I   : human/program user split and data-volume split,
+- Table II  : regular/real-time/overlapping volume mix and the fresh/duplicate
+              breakdown of overlapping transfers,
+- Fig 2     : per-continent user distribution (GAGE),
+- Fig 3     : the moving-window temporal shape of program requests,
+- Fig 4     : spatial-temporal correlation of human requests.
+
+``tests/test_trace_calibration.py`` verifies that the classification pipeline
+in :mod:`repro.core.classify` recovers the Table I/II statistics from these
+generators — that is the reproduction of §III of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from itertools import zip_longest
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+def itertools_zip_longest(groups):
+    return zip_longest(*groups)
+
+# ---------------------------------------------------------------------------
+# Data model
+# ---------------------------------------------------------------------------
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+WEEK = 7 * DAY
+MINUTE = 60.0
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class Request:
+    """One entry of an observatory access log (paper §III, Eq. 1).
+
+    A request tuple ``r_i = (ts, d, tr)``: access timestamp, data-object name
+    and requested observation time-range.  ``size_bytes`` is derived from the
+    time range and per-stream data rate.  ``continent`` is the coarse client
+    location recovered from the public IP (paper Fig 2).
+    """
+
+    ts: float                 # access timestamp (s since trace start)
+    user_id: int
+    obj: int                  # serialized data-object id (instrument, location)
+    tr_start: float           # requested range start (observation time, s)
+    tr_end: float             # requested range end
+    size_bytes: int
+    continent: int            # 0..5 (six continents, Antarctica excluded)
+
+    @property
+    def tr(self) -> float:
+        return self.tr_end - self.tr_start
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class ObjectGrid:
+    """Instrument catalog: ``n_types`` instrument types × ``n_locs`` locations.
+
+    Object ids are serialized as ``type * n_locs + loc`` mirroring Fig 4 where
+    rows are instrument ids and columns are proximity-sorted locations.
+    """
+
+    n_types: int
+    n_locs: int
+
+    @property
+    def n_objects(self) -> int:
+        return self.n_types * self.n_locs
+
+    def obj_id(self, itype: int, loc: int) -> int:
+        return itype * self.n_locs + loc
+
+    def type_of(self, obj: int) -> int:
+        return obj // self.n_locs
+
+    def loc_of(self, obj: int) -> int:
+        return obj % self.n_locs
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceProfile:
+    """Calibration constants for one observatory (Tables I & II + Fig 2)."""
+
+    name: str
+    n_users: int
+    duration: float                       # trace length in seconds
+    human_user_frac: float                # Table I (users)
+    program_volume_frac: float            # Table I (volume)
+    # Volume mix across program request types (Table II): regular, real-time,
+    # overlapping.  Must sum to 1 (these are fractions of *program* volume —
+    # the paper reports fractions of total volume; program volume dominates).
+    type_volume_mix: tuple[float, float, float]
+    overlap_duplicate_frac: float         # Table II right half
+    continent_probs: tuple[float, ...]    # Fig 2 user distribution
+    bytes_per_second_stream: float        # data rate of one stream
+    grid: ObjectGrid
+
+
+# Continent order: N.America, Asia, Europe, S.America, Africa, Oceania.
+# GAGE user distribution approximated from Fig 2; OOI is more US-centric.
+GAGE_PROFILE = TraceProfile(
+    name="gage",
+    n_users=600,
+    duration=8 * WEEK,
+    human_user_frac=0.941,
+    program_volume_frac=0.906,
+    type_volume_mix=(0.772, 0.061, 0.172),
+    overlap_duplicate_frac=0.896,
+    continent_probs=(0.28, 0.37, 0.18, 0.07, 0.04, 0.06),
+    bytes_per_second_stream=2e3,
+    grid=ObjectGrid(n_types=24, n_locs=40),
+)
+
+OOI_PROFILE = TraceProfile(
+    name="ooi",
+    n_users=400,
+    duration=4 * WEEK,
+    human_user_frac=0.867,
+    program_volume_frac=0.901,
+    type_volume_mix=(0.138, 0.257, 0.608),
+    overlap_duplicate_frac=0.904,
+    continent_probs=(0.62, 0.12, 0.14, 0.05, 0.02, 0.05),
+    bytes_per_second_stream=8e3,
+    grid=ObjectGrid(n_types=30, n_locs=30),
+)
+
+
+# ---------------------------------------------------------------------------
+# Generator
+# ---------------------------------------------------------------------------
+
+def _normalize(v: Sequence[float]) -> np.ndarray:
+    a = np.asarray(v, dtype=np.float64)
+    return a / a.sum()
+
+
+def _zipf_probs(n: int, alpha: float = 1.1) -> np.ndarray:
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return p / p.sum()
+
+
+class TraceGenerator:
+    """Synthesize an access trace calibrated to a :class:`TraceProfile`.
+
+    Program users are split into three behaviours (paper Fig 3):
+
+    - *regular*:     period P, window == P (fresh moving window),
+    - *real-time*:   period 60 s, window == 60 s (high-frequency regular),
+    - *overlapping*: period P, window k·P with k≈24 (e.g. past-day every hour).
+
+    Human users run short browsing sessions with spatial-temporal correlation:
+    a session picks a region and walks nearby (type, loc) cells (Fig 4).
+    """
+
+    def __init__(self, profile: TraceProfile, seed: int = 0):
+        self.profile = profile
+        self.rng = np.random.default_rng(seed)
+
+    # -- program users ------------------------------------------------------
+
+    def _program_user_plan(self, n_program: int) -> list[dict]:
+        """Assign each program user a behaviour.  User counts follow the
+        volume mix (more users where more volume); exact per-type volume
+        calibration is applied post-hoc in :meth:`generate` via per-type
+        stream-rate multipliers."""
+        p = self.profile
+        mix = _normalize(p.type_volume_mix)
+        dup = p.overlap_duplicate_frac
+        k_overlap = max(2, int(round(1.0 / max(1e-6, 1.0 - dup))))
+        n_by_type = np.maximum(1, np.round(mix * n_program)).astype(int)
+        per_type: list[list[dict]] = [[], [], []]
+        for btype, n in enumerate(n_by_type):
+            for _ in range(int(n)):
+                if btype == 0:      # regular
+                    period = float(self.rng.choice([HOUR, 2 * HOUR, 6 * HOUR]))
+                    window = period
+                elif btype == 1:    # real-time
+                    period = MINUTE
+                    window = MINUTE
+                else:               # overlapping
+                    period = HOUR
+                    window = k_overlap * HOUR
+                per_type[btype].append(
+                    dict(
+                        behaviour=("regular", "realtime", "overlapping")[btype],
+                        period=period,
+                        window=window,
+                        n_streams=int(self.rng.integers(1, 4)),
+                    )
+                )
+        # round-robin across types so truncation keeps type diversity
+        plans: list[dict] = []
+        for group in itertools_zip_longest(per_type):
+            plans.extend(p for p in group if p is not None)
+        return plans[:n_program] if len(plans) > n_program else plans
+
+    def _gen_program_requests(
+        self, user_id: int, plan: dict, continent: int
+    ) -> list[Request]:
+        p = self.profile
+        period, window = plan["period"], plan["window"]
+        # Real-time users would emit 60k+ requests over months; subsample the
+        # active span to keep synthetic traces tractable while preserving the
+        # high-frequency *pattern* (the classifier sees period=60s regardless).
+        if plan["behaviour"] == "realtime":
+            span = min(p.duration, 3 * DAY)
+        else:
+            span = p.duration
+        start = float(self.rng.uniform(0, period))
+        # stream choice follows object popularity (Zipf) — popular
+        # instruments are polled by many programs worldwide, which is what
+        # makes peer DTN caches and hub placement effective (paper §IV-C)
+        objs = self.rng.choice(p.grid.n_objects, size=plan["n_streams"],
+                               replace=False,
+                               p=_zipf_probs(p.grid.n_objects, alpha=1.0))
+        out: list[Request] = []
+        t = start
+        overlapping = plan["behaviour"] == "overlapping"
+        last_end: dict[int, float] = {}
+        while t < span:
+            # small jitter mirrors real script scheduling noise
+            jitter = float(self.rng.normal(0.0, 0.01 * period))
+            ts = max(0.0, t + jitter)
+            for obj in objs:
+                tr_end = ts
+                if overlapping:
+                    # past-window every period (e.g. past day every hour)
+                    tr_start = max(0.0, ts - window)
+                else:
+                    # "new data since the last request, without any overlap"
+                    tr_start = last_end.get(int(obj), max(0.0, ts - window))
+                    last_end[int(obj)] = tr_end
+                size = int((tr_end - tr_start) * p.bytes_per_second_stream)
+                out.append(
+                    Request(ts, user_id, int(obj), tr_start, tr_end, size, continent)
+                )
+            t += period
+        return out
+
+    # -- human users --------------------------------------------------------
+
+    def _gen_human_requests(self, user_id: int, continent: int) -> list[Request]:
+        p = self.profile
+        g = p.grid
+        n_sessions = int(self.rng.integers(1, 4))
+        out: list[Request] = []
+        type_pop = _zipf_probs(g.n_types)
+        for _ in range(n_sessions):
+            t0 = float(self.rng.uniform(0, p.duration))
+            # Session anchor region (Fig 4: users browse one region)
+            loc = int(self.rng.integers(0, g.n_locs))
+            itype = int(self.rng.choice(g.n_types, p=type_pop))
+            n_req = int(self.rng.integers(3, 12))
+            t = t0
+            for _ in range(n_req):
+                # random walk: same loc different type (column) or same type
+                # nearby loc (row) — the two correlations visible in Fig 4.
+                if self.rng.random() < 0.5:
+                    itype = int(self.rng.choice(g.n_types, p=type_pop))
+                else:
+                    loc = int(np.clip(loc + self.rng.integers(-2, 3), 0, g.n_locs - 1))
+                obj = g.obj_id(itype, loc)
+                window = float(self.rng.choice([HOUR, 6 * HOUR, DAY]))
+                tr_end = float(self.rng.uniform(0, max(1.0, t - 1.0))) if t > 2 else t
+                tr_start = max(0.0, tr_end - window)
+                size = int((tr_end - tr_start) * p.bytes_per_second_stream * 0.1)
+                out.append(Request(t, user_id, obj, tr_start, tr_end, size, continent))
+                t += float(self.rng.exponential(120.0))
+        return out
+
+    # -- public API ---------------------------------------------------------
+
+    def generate(self) -> list[Request]:
+        p = self.profile
+        n_human = int(round(p.n_users * p.human_user_frac))
+        n_program = p.n_users - n_human
+        cont_p = _normalize(p.continent_probs)
+        plans = self._program_user_plan(n_program)
+        uid = 0
+        by_type: dict[str, list[Request]] = {
+            "regular": [], "realtime": [], "overlapping": []}
+        for plan in plans:
+            cont = int(self.rng.choice(6, p=cont_p))
+            by_type[plan["behaviour"]].extend(
+                self._gen_program_requests(uid, plan, cont))
+            uid += 1
+        human: list[Request] = []
+        for _ in range(n_human):
+            cont = int(self.rng.choice(6, p=cont_p))
+            human.extend(self._gen_human_requests(uid, cont))
+            uid += 1
+
+        # --- exact volume calibration (Tables I & II) -----------------------
+        # Per-type stream-rate multipliers so program volume mix matches
+        # type_volume_mix exactly; human sizes scaled so the human/program
+        # volume split matches Table I.
+        mix = _normalize(p.type_volume_mix)
+        order = ("regular", "realtime", "overlapping")
+        totals = np.array(
+            [max(1, sum(r.size_bytes for r in by_type[t])) for t in order],
+            dtype=np.float64,
+        )
+        # target proportional volumes, anchored on the regular type
+        target = mix / mix[0] * totals[0]
+        mult = target / totals
+        program: list[Request] = []
+        for t, m in zip(order, mult):
+            for r in by_type[t]:
+                program.append(
+                    dataclasses.replace(r, size_bytes=max(1, int(r.size_bytes * m)))
+                )
+        prog_total = sum(r.size_bytes for r in program)
+        hum_total = max(1, sum(r.size_bytes for r in human))
+        h_frac = 1.0 - p.program_volume_frac
+        h_factor = (prog_total * h_frac / max(1e-9, p.program_volume_frac)) / hum_total
+        human = [
+            dataclasses.replace(r, size_bytes=max(1, int(r.size_bytes * h_factor)))
+            for r in human
+        ]
+        requests = program + human
+        requests.sort(key=lambda r: r.ts)
+        return requests
+
+
+def total_bytes(requests: Iterable[Request]) -> int:
+    return sum(r.size_bytes for r in requests)
+
+
+def make_trace(name: str, seed: int = 0, scale: float = 1.0) -> list[Request]:
+    """Convenience: generate the named observatory trace.
+
+    ``scale`` scales user count (for fast tests use scale<1).
+    """
+    base = {"ooi": OOI_PROFILE, "gage": GAGE_PROFILE}[name]
+    if scale != 1.0:
+        base = dataclasses.replace(base, n_users=max(8, int(base.n_users * scale)))
+    return TraceGenerator(base, seed=seed).generate()

@@ -1,0 +1,155 @@
+"""Causal (optionally sliding-window) GQA flash attention — Pallas TPU kernel.
+
+TARGET: TPU (MXU 128×128 systolic matmuls, VMEM working set).  Validated on
+CPU with ``interpret=True`` against the pure-jnp oracle in
+:mod:`repro.kernels.ref`.
+
+Tiling: grid = (batch, kv_head, q_block, kv_block); the kv_block axis is the
+innermost ("arbitrary") dimension so the online-softmax accumulators live in
+VMEM scratch across kv iterations.  Q/K/V blocks are staged HBM→VMEM by
+``BlockSpec``; each (q_block, kv_block) tile performs two MXU matmuls
+(logits and PV).  Causality is enforced two ways:
+
+- tile-level: fully-masked tiles are skipped with ``pl.when`` (no MXU work),
+  which recovers the triangle FLOPs like the CUDA flash-attention grid trick;
+- element-level: the diagonal tile applies an explicit mask.
+
+GQA: q heads of one kv group are folded into the q-block rows (the kernel
+sees q as [B, Hkv, G·Sq, D]) so the MXU tiles stay dense even for small
+group sizes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, block_q: int, block_kv: int,
+                  seq_len: int, window: int | None, group: int):
+    """One (q_block, kv_block) tile.
+
+    q_ref: [block_q·G, D] — G query heads folded into rows.
+    k_ref/v_ref: [block_kv, D].  o_ref: [block_q·G, D].
+    Scratch: acc [block_q·G, D] f32, m/l [block_q·G, 128] f32 (lane-padded).
+    """
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile-level causal/window culling
+    q_lo = qi * block_q                   # first q position in tile
+    k_lo = kj * block_kv
+    causal_live = k_lo <= q_lo + block_q - 1
+    if window is not None:
+        win_live = k_lo + block_kv - 1 >= q_lo - (window - 1)
+        live = jnp.logical_and(causal_live, win_live)
+    else:
+        live = causal_live
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [bq*G, D]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bkv, D]
+        v = v_ref[0, 0]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq*G, bkv]
+        # element mask on the (block-diagonal) boundary tiles
+        rows = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+        q_pos = q_lo + rows // group
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + k_lo
+        mask = q_pos >= cols
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - cols < window)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[:, :1]                          # [bq*G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)                    # [bq*G, bkv]
+        alpha = jnp.exp(m_prev - m_new)                # [bq*G, 1]
+        l_new = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [bq*G, D]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D].  Self-attention
+    (Sq == Skv), causal.  Returns [B, Sq, Hq, D].
+
+    Block sizes are MXU-aligned (multiples of 128).  VMEM working set per
+    step: q tile (block_q·G·D) + k/v tiles (2·block_kv·D) + acc — a few
+    hundred KB at D=128, far under the ~16 MB VMEM budget; block sizes can
+    be raised for wider heads.
+    """
+    assert causal, "kernel is specialized for causal self-attention"
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    nq = s // block_q
+    nk = s // block_kv
+
+    # fold G query heads of each kv group into rows: [B, Hkv, S·G? ...]
+    # layout: q[b, s, kv_head, g, d] -> [b, kv_head, s, g, d] -> rows s*g
+    qf = q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4)
+    qf = qf.reshape(b, hkv, s * g, d)
+    kf = k.transpose(0, 2, 1, 3)            # [B, Hkv, S, D]
+    vf = v.transpose(0, 2, 1, 3)
+
+    rows_per_block = block_q * g
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        seq_len=s, window=window, group=g)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows_per_block, d),
+                         lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, i, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda b_, h_, i, j: (b_, h_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows_per_block, d),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, s * g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rows_per_block, d), jnp.float32),
+            pltpu.VMEM((rows_per_block, 128), jnp.float32),
+            pltpu.VMEM((rows_per_block, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out.reshape(b, hkv, s, g, d).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, s, hq, d)

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers for the Pallas kernels, with automatic fallback.
+
+On TPU the Pallas kernels run natively; on CPU (this container, and the
+512-device dry-run) the pure-JAX implementations are used — same math,
+validated against each other by ``tests/test_kernels.py``.  Set
+``REPRO_FORCE_INTERPRET=1`` to run the Pallas kernels in interpret mode
+(slow; used by the kernel tests).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except RuntimeError:
+        return False
+
+
+def _force_interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_INTERPRET", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    block_q: int = 128, block_kv: int = 128):
+    """Flash attention: Pallas on TPU, chunked-jnp elsewhere."""
+    if _on_tpu() or _force_interpret():
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, block_q=block_q,
+            block_kv=block_kv, interpret=not _on_tpu())
+    from repro.models.attention import attention_any
+    return attention_any(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size",))
+def ssd_scan(x, dt, A, B, C, *, chunk_size: int = 128):
+    """Mamba-2 SSD: Pallas on TPU, chunked-jnp elsewhere."""
+    if _on_tpu() or _force_interpret():
+        return ssd_scan_pallas(x, dt, A, B, C, chunk_size=chunk_size,
+                               interpret=not _on_tpu())
+    from repro.models.mamba import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk_size)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately naive (materialize the full score matrix / run the exact
+per-token SSM recurrence) so correctness is self-evident; used by the
+per-kernel allclose tests across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    """Naive GQA attention.  q: [B,S,Hq,D]; k,v: [B,S,Hkv,D]."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[:, None] >= pos[None, :]
+    if window is not None:
+        mask &= pos[:, None] - pos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Exact sequential SSM recurrence (the definition SSD must match).
+
+    x: [Bt,S,H,P]; dt: [Bt,S,H] (>0); A: [H] (<0); B,C: [Bt,S,G,N].
+    Returns (y [Bt,S,H,P], final_state [Bt,H,N,P]) in fp32.
+    """
+    bt, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)   # [Bt,S,H,N]
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, None, :])                  # [Bt,S,H]
+
+    def step(state, inp):
+        x_t, dA_t, dt_t, B_t, C_t = inp
+        state = state * dA_t[..., None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhnp", B_t, dt_t, x_t)
+        y_t = jnp.einsum("bhn,bhnp->bhp", C_t, state)
+        return state, y_t
+
+    init = jnp.zeros((bt, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dA, 1, 0),
+          jnp.moveaxis(dtf, 1, 0), jnp.moveaxis(Bh, 1, 0),
+          jnp.moveaxis(Ch, 1, 0))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1), final

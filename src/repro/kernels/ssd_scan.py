@@ -1,0 +1,122 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+TARGET: TPU.  The CUDA selective-scan is a bandwidth-bound elementwise
+recurrence; the TPU-native reformulation (SSD, Dao & Gu 2024) turns each
+chunk into four MXU matmuls:
+
+    scores = (C·Bᵀ) ⊙ decay          [l,l]      (intra-chunk duality)
+    y_intra = scores · (x·dt)         [l,l]×[l,P]
+    y_inter = (C ⊙ e^cum) · S_prev    [l,N]×[N,P]
+    S_new   = e^Δ·S_prev + Bᵀ·(x·dt·e^(Δ−cum))   [N,l]×[l,P]
+
+Grid = (batch, head, chunk) with the chunk axis innermost ("arbitrary"): the
+running state S lives in VMEM scratch across chunk iterations — the
+sequential recurrence never leaves the core.  Block shapes are
+(l=chunk, N=state, P=head_dim) — all 128-aligned by config choice.
+
+Validated with ``interpret=True`` against the exact per-token recurrence in
+:func:`repro.kernels.ref.ssd_ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # [l, P]
+    dt = dt_ref[0, 0][:, 0]                      # [l]
+    dA = dA_ref[0, 0][:, 0]                      # [l]  (= dt * A_h, <= 0)
+    B = b_ref[0, 0].astype(jnp.float32)          # [l, N]
+    C = c_ref[0, 0].astype(jnp.float32)          # [l, N]
+
+    cum = jnp.cumsum(dA)                         # [l]
+    total = cum[-1]
+    # intra-chunk decay mask: exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(seg), 0.0)
+
+    xdt = x * dt[:, None]                        # [l, P]
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * decay          # [l, l]
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # [l, P]
+
+    s_prev = state_ref[...]                      # [N, P]
+    c_in = C * jnp.exp(cum)[:, None]
+    y += jax.lax.dot_general(
+        c_in, s_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    carry_decay = jnp.exp(total - cum)[:, None]  # [l, 1]
+    contrib = jax.lax.dot_general(
+        B, xdt * carry_decay, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # [N, P]
+    state_ref[...] = s_prev * jnp.exp(total) + contrib
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk_size: int = 128,
+                    interpret: bool = False):
+    """x: [Bt,S,H,P]; dt: [Bt,S,H] (softplus'd); A: [H] (<0);
+    B, C: [Bt,S,G,N].  Returns (y [Bt,S,H,P], final_state [Bt,H,N,P])."""
+    bt, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    l = chunk_size
+    assert s % l == 0, (s, l)
+    nc = s // l
+
+    xt = x.transpose(0, 2, 1, 3)                          # [Bt,H,S,P]
+    dtt = dt.transpose(0, 2, 1)[..., None]                # [Bt,H,S,1]
+    dAt = dtt * A[None, :, None, None]                    # [Bt,H,S,1]
+    Bt_ = B.transpose(0, 2, 1, 3)                         # [Bt,G,S,N]
+    Ct_ = C.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_ssd_kernel, chunk=l)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=(bt, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, l, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, l, n),
+                         lambda b_, h_, c_: (b_, h_ // rep, c_, 0)),
+            pl.BlockSpec((1, 1, l, n),
+                         lambda b_, h_, c_: (b_, h_ // rep, c_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, p), lambda b_, h_, c_: (b_, h_, c_, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bt, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt.astype(jnp.float32), dAt.astype(jnp.float32), Bt_, Ct_)
+
+    return y.transpose(0, 2, 1, 3), final

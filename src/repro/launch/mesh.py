@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax init,
+while tests and benches must see exactly one device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips single pod; (2, 16, 16) = 512 chips across 2 pods.
+
+    Axes: ``data`` carries DP/FSDP (and sequence sharding for long-context
+    decode), ``model`` carries TP/EP, ``pod`` is cross-pod DP.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch dimension."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def mesh_devices(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,57 @@
+"""Serving launcher: batched decode against a selected architecture with
+the HPM-scheduled engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
+        [--requests 12]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = (get_reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params,
+                         max_len=args.prompt_len + args.max_new + 8)
+    rng = np.random.default_rng(0)
+    now = 0.0
+    lat = []
+    for i in range(args.requests):
+        client = i % 3                      # 3 recurring clients
+        if cfg.codebooks > 1:
+            prompt = rng.integers(0, cfg.vocab,
+                                  size=(args.prompt_len, cfg.codebooks))
+        else:
+            prompt = (np.arange(args.prompt_len) * (client + 3)) % cfg.vocab
+        t0 = time.monotonic()
+        comp = engine.serve(Request(i, client, now, prompt, args.max_new),
+                            now)
+        lat.append(time.monotonic() - t0)
+        print(f"req {i} client {client}: prewarmed={comp.prefetched} "
+              f"{len(comp.tokens)} tokens in {lat[-1]*1e3:.0f} ms")
+        now += 20.0
+    print(f"served {engine.stats['total']} "
+          f"(prewarmed {engine.stats['prefetched_prefills']}); "
+          f"mean latency {np.mean(lat)*1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

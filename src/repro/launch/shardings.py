@@ -1,0 +1,241 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Strategy (DESIGN.md §4):
+
+- **TP** over the ``model`` axis: attention heads, MLP hidden dim, MoE
+  expert axis (EP), vocab dim of embed/lm_head, mamba heads.
+- **FSDP (ZeRO-3)** over ``data`` (and ``pod`` when present): the non-TP
+  dimension of every large weight — required to fit 671B training states on
+  16 GB chips.
+- Small/numerically-sensitive leaves (norm scales, conv kernels, A_log, ...)
+  are replicated.
+- Activations: batch over ``(pod, data)``; long-context decode shards the
+  KV-cache sequence dim over ``data`` instead (batch = 1).
+
+Rules are name-based over the param-tree path, with divisibility guards so
+any config compiles even when a dim does not divide the axis (XLA would pad;
+we prefer an explicit fallback to replication on that dim).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaves whose LAST dim is TP-sharded (column parallel)
+_COL_TP = {"w_q", "w_k", "w_v", "w_gate", "w_up", "w_uq", "w_dq", "w_uv",
+           "w_dkv", "w_z", "w_x", "w_dt", "in_proj"}
+# leaves whose FIRST dim is TP-sharded (row parallel)
+_ROW_TP = {"w_o", "w_down", "w_uk", "out_proj"}
+# replicated small leaves
+_REPLICATED = {"norm1", "norm2", "final_norm", "norm_scale", "A_log",
+               "dt_bias", "D", "conv_x_w", "conv_x_b", "conv_B_w", "conv_B_b",
+               "conv_C_w", "conv_C_b", "router", "w_B", "w_C"}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return size
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec(path: tuple, leaf, mesh: Mesh, mode: str = "train",
+               kv_shardable: bool = True, heads_shardable: bool = True) -> P:
+    """PartitionSpec for one parameter leaf given its tree path.
+
+    mode="train": TP over model + FSDP over (pod, data) — optimizer state
+    must be sharded everywhere.
+    mode="serve": TP over model only; weights replicated across the data
+    axis (FSDP all-gathers per decode step would dominate the step);
+    experts shard over model×data when divisible (EP across the full mesh —
+    what makes 671B weights fit for serving).
+    """
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    names = [n for n in names if isinstance(n, str)]
+    leafname = names[-1] if names else ""
+    shape = leaf.shape
+    # scan-stacked unit params carry a leading [n_units] axis: shard the
+    # inner dims, replicate the stack axis
+    stacked = "units" in names
+    lead: tuple = ()
+    if stacked and len(shape) >= 2:
+        lead = (None,)
+        shape = shape[1:]
+    tp = _axis_size(mesh, "model")
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+    if mode == "fsdp":
+        # pure-FSDP profile (Perf iteration 4): NO tensor parallelism — the
+        # "model" axis joins the FSDP group.  Right call for small dense
+        # models where TP activation all-reduces dwarf weight traffic.
+        all_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        total = 1
+        for a in all_axes:
+            total *= mesh.shape[a]
+        if leafname in _REPLICATED or len(shape) <= 1:
+            return P()
+        if leafname in ("embed", "lm_head"):
+            # NEVER shard the d dim of embeddings: the logits contraction
+            # would produce full fp32 [B,S,V] partials + all-reduce
+            # (observed 2×196 GiB on mamba2).  Shard vocab if it divides,
+            # else replicate (≤0.5 GB for the affected configs).
+            v = shape[0]
+            if _div(v, total):
+                return P(*lead, all_axes, None)
+            if _div(v, tp):
+                return P(*lead, "model", None)
+            return P(*lead, None, None)
+        for i in range(len(shape)):
+            if _div(shape[i], total):
+                spec = [None] * len(shape)
+                spec[i] = all_axes
+                return P(*lead, *spec)
+        return P(*lead, *([None] * len(shape)))
+    if mode == "serve":
+        # no FSDP for non-expert weights during serving
+        dp = None
+        # KV-side projections must produce tensors with the *cache's*
+        # sharding: when the KV heads (or the MLA latent) don't divide the
+        # TP axis the cache is head-replicated, so the projection weights
+        # are replicated too — otherwise GSPMD re-gathers the whole cache
+        # every step (observed: 1 GiB all-gather per layer per token).
+        if leafname in ("w_k", "w_v", "w_dkv") and not kv_shardable:
+            return P(*lead, None, None)
+
+    if leafname in _REPLICATED or len(shape) <= 1:
+        # 1-D head-indexed vectors could shard over model, but they are tiny
+        return P()
+
+    in_moe = any(n == "mlp" for n in names) and len(shape) == 3
+    if in_moe:
+        e = shape[0]
+        if mode == "serve":
+            # EP across the whole mesh when the expert count allows it
+            full = tuple(a for a in ("model", "pod", "data")
+                         if a in mesh.axis_names)
+            full_n = tp * _dp_size(mesh)
+            if _div(e, full_n):
+                return P(*lead, full, None, None)
+            return P(*lead, "model" if _div(e, tp) else None, None, None)
+        # train: EP over model + ZeRO-3 on the d/f dims — the per-layer
+        # bf16 weight gather (done EXPLICITLY inside the shard_map dispatch,
+        # Perf iteration 6/7) costs ~1.3-1.7 GB/layer/device, far below the
+        # token-routing alternative at 1M-token batches, and keeps the
+        # resident expert slice at E/(tp·dpn) ≈ 3.7-5.1 GB for the 480B/671B
+        # configs.
+        eax = "model" if _div(e, tp) else None
+        if leafname == "w_down":            # [E, f, d]: shard d
+            return P(*lead, eax, None,
+                     dp if dp is not None and _div(shape[2], dpn) else None)
+        return P(*lead, eax,                # [E, d, f]: shard d
+                 dp if dp is not None and _div(shape[1], dpn) else None, None)
+
+    if leafname in ("embed", "lm_head"):
+        # vocab over model only: FSDP on the d dim makes the logits einsum
+        # contraction mismatch the (batch-sharded, d-replicated) activations
+        # and GSPMD responds by GATHERING THE BATCH (observed: 2×7.8 GiB
+        # f32 per step).  V/tp slices are ≤200 MB for every assigned arch.
+        v, d = shape
+        return P(*lead, "model" if _div(v, tp) else None, None)
+
+    # attention projections get TP only when the head count divides the TP
+    # axis — otherwise GSPMD re-partitions activations across heads and
+    # GATHERS THE BATCH (observed: 10.5 GiB f32 gathers on arctic's 56
+    # heads); the fallback is FSDP-only (batch-parallel attention).
+    attn_leaf = leafname in ("w_q", "w_k", "w_v", "w_o", "w_uq", "w_uk",
+                             "w_uv", "w_dq", "w_dkv")
+    tp_ok = heads_shardable or not attn_leaf
+
+    if leafname in _COL_TP and len(shape) == 2:
+        d_in, d_out = shape
+        return P(*lead, dp if dp is not None and _div(d_in, dpn) else None,
+                 "model" if tp_ok and _div(d_out, tp) else None)
+
+    if leafname in _ROW_TP and len(shape) == 2:
+        d_in, d_out = shape
+        return P(*lead, "model" if tp_ok and _div(d_in, tp) else None,
+                 dp if dp is not None and _div(d_out, dpn) else None)
+
+    # default: FSDP on the largest divisible dim
+    for i, s in enumerate(shape):
+        if dp is not None and _div(s, dpn):
+            spec = [None] * len(shape)
+            spec[i] = dp
+            return P(*lead, *spec)
+    return P(*lead, *([None] * len(shape)))
+
+
+def param_shardings(param_shapes, mesh: Mesh, mode: str = "train",
+                    cfg=None):
+    """Map a pytree of ShapeDtypeStructs/arrays -> NamedShardings."""
+    kv_shardable = True
+    heads_shardable = True
+    if cfg is not None and cfg.attn is not None:
+        tp = _axis_size(mesh, "model")
+        heads_shardable = _div(cfg.attn.n_heads, tp)
+        if cfg.attn_global is not None:
+            heads_shardable &= _div(cfg.attn_global.n_heads, tp)
+        if cfg.attn.mla is not None:
+            kv_shardable = False            # latent cache is head-less
+        else:
+            kv_shardable = _div(cfg.attn.n_kv_heads, tp)
+            if cfg.attn_global is not None:
+                kv_shardable &= _div(cfg.attn_global.n_kv_heads, tp)
+
+    def fn(path, leaf):
+        return NamedSharding(
+            mesh, param_spec(path, leaf, mesh, mode, kv_shardable,
+                             heads_shardable))
+    return jax.tree_util.tree_map_with_path(fn, param_shapes)
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2) -> P:
+    """Sharding for [B, S, ...] activations/tokens: batch over (pod, data)."""
+    dp = _dp_axes(mesh)
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, ndim))
+
+
+def cache_spec(mesh: Mesh, batch: int, leafname: str, ndim: int) -> P:
+    """KV/SSM cache sharding for serving.
+
+    - decode_32k (large batch): batch over (pod,data), heads over model.
+    - long_500k (batch=1): sequence over data, heads over model (sequence
+      parallelism — the KV cache is the dominant memory object).
+    """
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+    if batch % max(dpn, 1) == 0 and batch >= dpn:
+        # [B, S, H, D] or [B, S, dc] or ssm [B, H, N, P] / conv [B, K, C]
+        if ndim >= 3:
+            return P(dp, None, "model") if ndim == 3 else \
+                P(dp, None, "model", None)
+        return P(dp, None)
+    # batch too small: shard the sequence dim (axis 1) over data
+    data_ax = "data" if "data" in mesh.axis_names else None
+    if ndim == 4:
+        return P(None, data_ax, "model", None)
+    if ndim == 3:
+        return P(None, data_ax, None)
+    return P(None, None)

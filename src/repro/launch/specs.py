@@ -1,0 +1,173 @@
+"""ShapeDtypeStruct stand-ins + shardings for every model input — the
+dry-run contract (weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShapeSpec
+from repro.launch.shardings import _dp_axes, _dp_size, batch_spec
+from repro.models.transformer import ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.codebooks) if cfg.codebooks > 1 else (b, s)
+    specs = {
+        "tokens": _sds(tok_shape, jnp.int32),
+        "labels": _sds(tok_shape, jnp.int32),
+    }
+    if cfg.n_prefix:
+        specs["prefix_embeddings"] = _sds((b, cfg.n_prefix, cfg.d_model),
+                                          jnp.bfloat16)
+    return specs
+
+
+def train_input_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    specs = train_input_specs(cfg, shape)
+    return {k: NamedSharding(mesh, batch_spec(mesh, v.ndim))
+            for k, v in specs.items()}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.codebooks) if cfg.codebooks > 1 else (b, s)
+    specs = {"tokens": _sds(tok_shape, jnp.int32)}
+    if cfg.n_prefix:
+        specs["prefix_embeddings"] = _sds((b, cfg.n_prefix, cfg.d_model),
+                                          jnp.bfloat16)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(cfg: ModelConfig, spec, batch: int, max_len: int,
+                      window_caches: bool = False):
+    mixer, _ = spec
+    if mixer == "mamba":
+        m = cfg.mamba
+        return {
+            "ssm": _sds((batch, m.n_heads, m.d_state, m.head_dim),
+                        jnp.float32),
+            "conv": {
+                "x": _sds((batch, m.d_conv - 1, m.d_inner), cfg.dtype),
+                "B": _sds((batch, m.d_conv - 1, m.n_groups * m.d_state),
+                          cfg.dtype),
+                "C": _sds((batch, m.d_conv - 1, m.n_groups * m.d_state),
+                          cfg.dtype),
+            },
+        }
+    acfg = cfg.mixer_cfg(mixer)
+    if window_caches and acfg.mla is None and acfg.window is not None:
+        max_len = min(max_len, acfg.window)
+    if acfg.mla is not None:
+        m = acfg.mla
+        return {
+            "c": _sds((batch, max_len, m.kv_lora_rank), cfg.dtype),
+            "k_rope": _sds((batch, max_len, m.rope_head_dim), cfg.dtype),
+        }
+    return {
+        "k": _sds((batch, max_len, acfg.n_kv_heads, acfg.head_dim), cfg.dtype),
+        "v": _sds((batch, max_len, acfg.n_kv_heads, acfg.head_dim), cfg.dtype),
+    }
+
+
+def _stack(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda x: _sds((n, *x.shape), x.dtype), tree)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                window_caches: bool = False):
+    """Cache pytree (ShapeDtypeStructs) mirroring ``prefill``'s output.
+    ``window_caches``: ring caches of size min(max_len, window) for
+    sliding-window layers (Perf iteration 5)."""
+    caches: dict[str, Any] = {
+        "prelude": [_layer_cache_spec(cfg, s, batch, max_len, window_caches)
+                    for s in cfg.prelude],
+        "units": [_stack(_layer_cache_spec(cfg, s, batch, max_len,
+                                           window_caches), cfg.n_units)
+                  for s in cfg.pattern],
+    }
+    return caches
+
+
+def _cache_leaf_pspec(path, leaf, mesh: Mesh, batch: int, stacked: bool) -> P:
+    """Per-leaf cache sharding: KV seq over data when batch is tiny
+    (long-context sequence parallelism), batch over (pod,data) otherwise;
+    heads/state over model."""
+    names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+    leafname = names[-1] if names else ""
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+    tp = mesh.shape["model"]
+    big_batch = batch % max(dpn, 1) == 0 and batch >= dpn
+    lead = (None,) if stacked else ()
+    nd = leaf.ndim - len(lead)
+
+    def head_ax(size):
+        return "model" if size % tp == 0 else None
+
+    shape = leaf.shape[len(lead):]
+    if leafname in ("k", "v"):                       # [B, S, H, D]
+        if big_batch:
+            return P(*lead, dp, None, head_ax(shape[2]), None)
+        return P(*lead, None, "data", head_ax(shape[2]), None)
+    if leafname in ("c", "k_rope"):                  # [B, S, dc]
+        if big_batch:
+            return P(*lead, dp, None, None)
+        return P(*lead, None, "data", None)
+    if leafname == "ssm":                            # [B, H, N, P]
+        return P(*lead, dp if big_batch else None, head_ax(shape[1]),
+                 None, None)
+    if leafname in ("x", "B", "C"):                  # conv [B, K-1, C]
+        return P(*lead, dp if big_batch else None, None,
+                 "model" if shape[2] % tp == 0 else None)
+    return P()
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, max_len: int, mesh: Mesh,
+                    window_caches: bool = False):
+    specs = cache_specs(cfg, batch, max_len, window_caches)
+
+    def for_subtree(tree, stacked):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: NamedSharding(
+                mesh, _cache_leaf_pspec(p, l, mesh, batch, stacked)), tree)
+
+    return {
+        "prelude": [for_subtree(t, False) for t in specs["prelude"]],
+        "units": [for_subtree(t, True) for t in specs["units"]],
+    }
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       window_caches: bool = False):
+    """Inputs for serve_step: one new token + caches at seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, cfg.codebooks) if cfg.codebooks > 1 else (b,)
+    return {
+        "token": _sds(tok_shape, jnp.int32),
+        "caches": cache_specs(cfg, b, s, window_caches),
+        "cache_len": _sds((), jnp.int32),
+    }
+
+
+def token_sharding(cfg: ModelConfig, batch: int, mesh: Mesh):
+    dpn = _dp_size(mesh)
+    dp = _dp_axes(mesh)
+    if batch % max(dpn, 1) == 0 and batch >= dpn:
+        if cfg.codebooks > 1:
+            return NamedSharding(mesh, P(dp, None))
+        return NamedSharding(mesh, P(dp))
+    return NamedSharding(mesh, P(*([None] * (2 if cfg.codebooks > 1 else 1))))

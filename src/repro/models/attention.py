@@ -1,0 +1,397 @@
+"""Attention: GQA (RoPE, optional sliding window), MLA (DeepSeek-V3 style),
+prefill and decode paths.
+
+Two compute paths:
+
+- ``dense_attention``  — plain masked softmax; used for short sequences.
+- ``chunked_attention`` — memory-efficient online-softmax attention that
+  iterates over (q-chunk, kv-chunk) pairs with a ``lax.scan``, visiting only
+  pairs allowed by the causal/window structure.  The compiled HLO therefore
+  performs the *triangle's* FLOPs, not the full S² square — this is the
+  pure-JAX analogue of the Pallas flash kernel
+  (:mod:`repro.kernels.flash_attention`) and is what the multi-pod dry-run
+  lowers on CPU.  On TPU the Pallas kernel takes over via
+  :mod:`repro.kernels.ops`.
+
+MLA is evaluated in its *absorbed* form: the per-head no-PE query is
+projected into the KV latent space, so attention runs like MQA with a shared
+576-dim key (512 latent + 64 rope) and a 512-dim latent value; the KV cache
+stores only the latent — MLA's whole point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.ctx import constrain
+from repro.models.layers import DEFAULT_DTYPE, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: int | None = None          # sliding-window size (local attention)
+    mla: MLAConfig | None = None
+    chunk_size: int = 512              # chunked-attention block
+    dense_threshold: int = 2048        # use dense path for S <= this
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def make_attention_params(key, cfg: AttentionConfig, dtype=DEFAULT_DTYPE) -> Any:
+    if cfg.mla is not None:
+        m = cfg.mla
+        ks = jax.random.split(key, 7)
+        return {
+            "w_dq": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype),
+            "w_uq": dense_init(ks[1], m.q_lora_rank,
+                               cfg.n_heads * (m.nope_head_dim + m.rope_head_dim),
+                               dtype),
+            "w_dkv": dense_init(ks[2], cfg.d_model,
+                                m.kv_lora_rank + m.rope_head_dim, dtype),
+            # per-head absorption matrices
+            "w_uk": dense_init(ks[3], cfg.n_heads * m.nope_head_dim,
+                               m.kv_lora_rank, dtype),
+            "w_uv": dense_init(ks[4], m.kv_lora_rank,
+                               cfg.n_heads * m.v_head_dim, dtype),
+            "w_o": dense_init(ks[5], cfg.n_heads * m.v_head_dim, cfg.d_model,
+                              dtype),
+        }
+    ks = jax.random.split(key, 4)
+    return {
+        "w_q": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim, dtype),
+        "w_k": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "w_v": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "w_o": dense_init(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _gqa_expand(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """[B,S,Hq,D] -> [B,S,Hkv,G,D]."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+def dense_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    q_offset: int = 0,
+                    scale: float | None = None) -> jnp.ndarray:
+    """Plain masked-softmax GQA attention.
+
+    q: [B,Sq,Hq,Dk]; k: [B,Skv,Hkv,Dk]; v: [B,Skv,Hkv,Dv]. Hq % Hkv == 0.
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode).
+    """
+    b, sq, hq, dk = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    qg = _gqa_expand(q, hkv)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, hq, v.shape[-1])
+
+
+def _chunk_pairs(n_chunks: int, window_chunks: int | None):
+    """(i, j) q/kv chunk pairs that the causal/window mask allows, ordered by
+    q chunk then kv chunk (so the online-softmax carry is correct)."""
+    pairs = []
+    for i in range(n_chunks):
+        j_lo = 0 if window_chunks is None else max(0, i - window_chunks)
+        for j in range(j_lo, i + 1):
+            pairs.append((i, j))
+    return pairs
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: int | None = None,
+                      chunk_size: int = 512,
+                      scale: float | None = None) -> jnp.ndarray:
+    """Online-softmax attention over (q-chunk, kv-chunk) pairs.
+
+    Only causally-reachable chunk pairs are visited, so compiled FLOPs match
+    the triangle (plus one diagonal chunk of slack).  Works for self-
+    attention (Sq == Skv) with q and k aligned at position 0.
+    """
+    b, s, hq, dk = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dk)
+    assert s % chunk_size == 0, (s, chunk_size)
+    n = s // chunk_size
+    wc = None if window is None else max(0, math.ceil(window / chunk_size))
+    pairs = _chunk_pairs(n, wc)
+    ii = jnp.array([p[0] for p in pairs], jnp.int32)
+    jj = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    qg = _gqa_expand(q, hkv)                    # [B,S,K,G,D]
+    g = hq // hkv
+    c = chunk_size
+
+    acc0 = jnp.zeros((b, s, hkv, g, dv), jnp.float32)
+    m0 = jnp.full((b, s, hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, s, hkv, g), jnp.float32)
+
+    kpos_base = jnp.arange(c)
+    qpos_base = jnp.arange(c)
+
+    def step(carry, ij):
+        acc, m, l = carry
+        i, j = ij
+        qi = jax.lax.dynamic_slice_in_dim(qg, i * c, c, axis=1)
+        kj = jax.lax.dynamic_slice_in_dim(k, j * c, c, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * c, c, axis=1)
+        logits = jnp.einsum("bskgd,btkd->bkgst", qi, kj).astype(jnp.float32)
+        logits *= scale
+        qpos = qpos_base + i * c
+        kpos = kpos_base + j * c
+        mask = jnp.ones((c, c), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        # online softmax update for q chunk i
+        mi = jax.lax.dynamic_slice_in_dim(m, i * c, c, axis=1)     # [B,c,K,G]
+        li = jax.lax.dynamic_slice_in_dim(l, i * c, c, axis=1)
+        acci = jax.lax.dynamic_slice_in_dim(acc, i * c, c, axis=1)
+        m_blk = jnp.max(logits, axis=-1)                            # [B,K,G,c]
+        m_blk = jnp.moveaxis(m_blk, -1, 1)                          # [B,c,K,G]
+        m_new = jnp.maximum(mi, m_blk)
+        p = jnp.exp(logits - jnp.moveaxis(m_new, 1, -1)[..., None])
+        l_blk = jnp.moveaxis(jnp.sum(p, axis=-1), -1, 1)
+        alpha = jnp.exp(mi - m_new)
+        l_new = li * alpha + l_blk
+        pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), vj)
+        acc_new = acci * alpha[..., None] + pv.astype(jnp.float32)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, acc_new, i * c, axis=1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * c, axis=1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * c, axis=1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (ii, jj))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(b, s, hq, dv)
+
+
+def attention_any(q, k, v, *, causal: bool = True, window: int | None = None,
+                  chunk_size: int = 512, dense_threshold: int = 2048,
+                  scale: float | None = None) -> jnp.ndarray:
+    """Choose dense vs chunked path by sequence length.  If the preferred
+    chunk does not divide S (e.g. prefix-augmented sequences), fall back to
+    smaller MXU-aligned chunks before giving up on the chunked path."""
+    s = q.shape[1]
+    if s > dense_threshold:
+        for c in (chunk_size, 256, 128, 64):
+            if s % c == 0:
+                return chunked_attention(q, k, v, causal=causal,
+                                         window=window, chunk_size=c,
+                                         scale=scale)
+    return dense_attention(q, k, v, causal=causal, window=window,
+                           scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (projections + rope + attention), prefill and decode
+# ---------------------------------------------------------------------------
+
+def gqa_forward(params, cfg: AttentionConfig, x: jnp.ndarray,
+                positions: jnp.ndarray) -> jnp.ndarray:
+    """Training/prefill self-attention.  x: [B,S,D]; positions: [S]."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["w_q"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,dh->bsh", x, params["w_k"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x, params["w_v"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention_any(q, k, v, causal=True, window=cfg.window,
+                        chunk_size=cfg.chunk_size,
+                        dense_threshold=cfg.dense_threshold)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(b, s, -1), params["w_o"])
+
+
+def gqa_prefill(params, cfg: AttentionConfig, x, positions):
+    """Prefill: returns (out, kv_cache) with cache [B,S,Hkv,D] each."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["w_q"]).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,dh->bsh", x, params["w_k"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x, params["w_v"]).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention_any(q, k, v, causal=True, window=cfg.window,
+                        chunk_size=cfg.chunk_size,
+                        dense_threshold=cfg.dense_threshold)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, -1), params["w_o"])
+    return out, {"k": k, "v": v}
+
+
+def gqa_decode(params, cfg: AttentionConfig, x, cache, cache_len):
+    """One-token decode.  x: [B,1,D]; cache k/v: [B,Smax,Hkv,D];
+    cache_len: [] int32 — number of valid cache positions.  Returns
+    (out [B,1,D], updated cache).
+
+    Sliding-window layers may use a RING cache of size ≤ window (Perf
+    iteration 5): the write index wraps (``pos % Smax``) and positions the
+    window can no longer see are overwritten in place — softmax is
+    permutation-invariant over the key set, and rope was applied at each
+    key's absolute position, so no re-ordering is needed.
+    """
+    b = x.shape[0]
+    smax = cache["k"].shape[1]
+    pos = cache_len  # scalar position of the new token
+    ring = cfg.window is not None and smax <= cfg.window
+    q = jnp.einsum("bsd,dh->bsh", x, params["w_q"]).reshape(
+        b, 1, cfg.n_heads, cfg.head_dim)
+    k = jnp.einsum("bsd,dh->bsh", x, params["w_k"]).reshape(
+        b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x, params["w_v"]).reshape(
+        b, 1, cfg.n_kv_heads, cfg.head_dim)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    write_at = pos % smax if ring else pos
+    k_cache = constrain(
+        jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write_at, axis=1),
+        "kv_cache")
+    v_cache = constrain(
+        jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write_at, axis=1),
+        "kv_cache")
+    qg = _gqa_expand(q, cfg.n_kv_heads)                       # [B,1,K,G,D]
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    logits /= math.sqrt(cfg.head_dim)
+    kpos = jnp.arange(smax)
+    valid = kpos <= pos        # warm-up; all-true once the ring is full
+    if cfg.window is not None and not ring:
+        valid &= kpos > pos - cfg.window
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache)
+    out = out.reshape(b, 1, -1)
+    out = jnp.einsum("bsh,hd->bsd", out, params["w_o"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (absorbed form)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(params, cfg: AttentionConfig, x, positions):
+    """Compute absorbed-form q' (latent-space) and latent k/v."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+    q = jnp.einsum("bsr,rh->bsh", cq, params["w_uq"]).reshape(
+        b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # absorb W_uk: q' = q_nope @ W_uk (per head) -> latent dim
+    w_uk = params["w_uk"].reshape(h, m.nope_head_dim, m.kv_lora_rank)
+    q_lat = jnp.einsum("bshd,hdr->bshr", q_nope, w_uk)
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_lat, k_rope = ckv[..., : m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_lat, q_rope, c_lat, k_rope[:, :, 0, :]
+
+
+def _mla_out(params, cfg: AttentionConfig, attn_lat):
+    """attn_lat: [B,S,H,latent] -> output projection."""
+    m = cfg.mla
+    b, s, h, _ = attn_lat.shape
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bshr,rhd->bshd", attn_lat, w_uv)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(b, s, h * m.v_head_dim),
+                      params["w_o"])
+
+
+def mla_forward(params, cfg: AttentionConfig, x, positions):
+    """MLA self-attention (training).  Absorbed form: MQA with shared
+    (latent ⊕ rope) key of dim kv_lora_rank + rope_head_dim."""
+    m = cfg.mla
+    q_lat, q_rope, c_lat, k_rope = _mla_qkv(params, cfg, x, positions)
+    # assemble MQA-style q/k: concat latent and rope parts
+    q_cat = jnp.concatenate([q_lat, jnp.broadcast_to(
+        q_rope, q_rope.shape)], axis=-1)                     # [B,S,H,dc+dr]
+    k_cat = jnp.concatenate([c_lat, k_rope], axis=-1)[:, :, None, :]
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    attn = attention_any(q_cat, k_cat, c_lat[:, :, None, :], causal=True,
+                         chunk_size=cfg.chunk_size,
+                         dense_threshold=cfg.dense_threshold, scale=scale)
+    return _mla_out(params, cfg, attn)
+
+
+def mla_prefill(params, cfg: AttentionConfig, x, positions):
+    m = cfg.mla
+    q_lat, q_rope, c_lat, k_rope = _mla_qkv(params, cfg, x, positions)
+    q_cat = jnp.concatenate([q_lat, q_rope], axis=-1)
+    k_cat = jnp.concatenate([c_lat, k_rope], axis=-1)[:, :, None, :]
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    attn = attention_any(q_cat, k_cat, c_lat[:, :, None, :], causal=True,
+                         chunk_size=cfg.chunk_size,
+                         dense_threshold=cfg.dense_threshold, scale=scale)
+    out = _mla_out(params, cfg, attn)
+    return out, {"c": c_lat, "k_rope": k_rope}     # latent-only cache
+
+
+def mla_decode(params, cfg: AttentionConfig, x, cache, cache_len):
+    m = cfg.mla
+    b = x.shape[0]
+    pos = cache_len
+    posv = jnp.full((1,), pos, jnp.int32)
+    q_lat, q_rope, c_lat, k_rope = _mla_qkv(params, cfg, x, posv)
+    c_cache = constrain(
+        jax.lax.dynamic_update_slice_in_dim(cache["c"], c_lat, pos, axis=1),
+        "latent_cache")
+    kr_cache = constrain(
+        jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, pos,
+                                            axis=1), "latent_cache")
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache)
+              + jnp.einsum("bshr,btr->bhst", q_rope, kr_cache))
+    logits = logits.astype(jnp.float32) * scale
+    smax = c_cache.shape[1]
+    valid = jnp.arange(smax) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(c_cache.dtype)
+    attn = jnp.einsum("bhst,btr->bshr", probs, c_cache)
+    out = _mla_out(params, cfg, attn)
+    return out, {"c": c_cache, "k_rope": kr_cache}

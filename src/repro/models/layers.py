@@ -1,0 +1,128 @@
+"""Basic neural layers: norms, RoPE, embeddings, MLPs.
+
+Pure-JAX, parameter pytrees are plain nested dicts.  Initializers take an
+``jax.random`` key and return arrays; the whole model init composes them and
+is run through ``jax.eval_shape`` for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict of arrays
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=DEFAULT_DTYPE,
+               scale: float | None = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=DEFAULT_DTYPE) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def norm_init(d: int, dtype=jnp.float32) -> jnp.ndarray:
+    # norm scales kept in fp32 (tiny, numerically sensitive)
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale
+    return out.astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary position embedding.  x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up).astype(jnp.float32))
+    return jnp.einsum("...f,fd->...d", h.astype(x.dtype), w_down)
+
+
+# ---------------------------------------------------------------------------
+# parameter factories
+# ---------------------------------------------------------------------------
+
+def make_mlp_params(key, d_model: int, d_ff: int, gated: bool = True,
+                    dtype=DEFAULT_DTYPE) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if gated:
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in params:
+        return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])
+    return gelu_mlp(x, params["w_up"], params["w_down"])
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy; logits [..., V] in any float dtype.
+
+    The gold-logit lookup uses a one-hot contraction rather than
+    ``take_along_axis``: with vocab-sharded logits (TP), the contraction
+    keeps every operand in its sharded layout and reduces to a cheap
+    all-reduce of [B,S] — take_along_axis makes GSPMD gather the full
+    fp32 logits onto every device (observed: 2×7.8 GiB/step on arctic).
+    """
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    # stable logsumexp with shard-friendly reductions
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(labels, v, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,262 @@
+"""Mamba-2 (SSD — state-space duality) block in JAX.
+
+The SSD chunked algorithm (Dao & Gu, 2024): split the sequence into chunks,
+compute the intra-chunk part as a masked attention-like product and carry
+inter-chunk states with a sequential scan over chunks.  Per-chunk compute is
+MXU-friendly matmuls — that is the TPU adaptation of the CUDA selective-scan
+(and what :mod:`repro.kernels.ssd_scan` implements as a Pallas kernel).
+
+Projections are kept SEPARATE (w_z, w_x, w_B, w_C, w_dt) rather than fused
+as in the reference CUDA implementation: the fused projection's output
+concatenates segments whose natural TP shardings differ (heads vs state),
+which would force GSPMD reshards.  Separate projections let z/x/dt shard
+over the model axis (heads) while B/C stay replicated (they are shared
+across heads within a group) — recorded in DESIGN.md §Hardware-adaptation.
+
+Used by ``mamba2-1.3b`` (pure SSM) and ``jamba`` (hybrid; Jamba ships
+Mamba-1, we use the SSD formulation as the TPU-native equivalent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DEFAULT_DTYPE, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 128           # N
+    head_dim: int = 64           # P
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1
+    chunk_size: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def make_mamba_params(key, cfg: MambaConfig, dtype=DEFAULT_DTYPE) -> Any:
+    ks = jax.random.split(key, 8)
+    di, n, g, h = cfg.d_inner, cfg.d_state, cfg.n_groups, cfg.n_heads
+    return {
+        "w_z": dense_init(ks[0], cfg.d_model, di, dtype),
+        "w_x": dense_init(ks[1], cfg.d_model, di, dtype),
+        "w_B": dense_init(ks[2], cfg.d_model, g * n, dtype),
+        "w_C": dense_init(ks[3], cfg.d_model, g * n, dtype),
+        "w_dt": dense_init(ks[4], cfg.d_model, h, dtype),
+        "conv_x_w": (jax.random.normal(ks[5], (cfg.d_conv, di), jnp.float32)
+                     * 0.1).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B_w": (jax.random.normal(ks[6], (cfg.d_conv, g * n), jnp.float32)
+                     * 0.1).astype(dtype),
+        "conv_B_b": jnp.zeros((g * n,), dtype),
+        "conv_C_w": (jax.random.normal(ks[7], (cfg.d_conv, g * n), jnp.float32)
+                     * 0.1).astype(dtype),
+        "conv_C_b": jnp.zeros((g * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[0], di, cfg.d_model, dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] for
+    i >= j, -inf otherwise.  x: [..., L]."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk_size: int):
+    """Exact SSD over chunks.
+
+    x: [Bt, S, H, P]; dt: [Bt, S, H] (already softplus'd, >0);
+    A: [H] (negative); B, C: [Bt, S, G, N] with H % G == 0.
+    Returns y: [Bt, S, H, P] and final state [Bt, H, N, P] (fp32).
+    """
+    bt, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    l = chunk_size
+    assert s % l == 0, (s, l)
+    nc = s // l
+    rep = h // g
+
+    xc = x.reshape(bt, nc, l, h, p)
+    dtc = dt.reshape(bt, nc, l, h)
+    Bc = B.reshape(bt, nc, l, g, n)
+    Cc = C.reshape(bt, nc, l, g, n)
+    dA = dtc * A[None, None, None, :]                     # [Bt,nc,l,H] (<=0)
+
+    # intra-chunk (attention-like with decay mask)
+    seg = _segsum(jnp.moveaxis(dA, -1, -2))               # [Bt,nc,H,l,l]
+    decay = jnp.exp(seg)
+    Bh = jnp.repeat(Bc, rep, axis=3)                      # [Bt,nc,l,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)     # [Bt,nc,H,l,l]
+    scores = scores * decay.astype(scores.dtype)
+    xdt = xc * dtc[..., None].astype(xc.dtype)            # [Bt,nc,l,H,P]
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", scores.astype(x.dtype), xdt)
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) B_j (dt_j x_j)
+    cum = jnp.cumsum(dA, axis=2)                          # [Bt,nc,l,H]
+    total = cum[:, :, -1:, :]                             # [Bt,nc,1,H]
+    state_decay = jnp.exp(total - cum)                    # [Bt,nc,l,H]
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp",
+                        Bh, state_decay.astype(x.dtype), xdt)
+
+    # inter-chunk recurrence over chunks (state carried in fp32)
+    chunk_decay = jnp.exp(total[:, :, 0, :])              # [Bt,nc,H]
+
+    def scan_fn(carry, inp):
+        s_prev = carry                                    # [Bt,H,N,P] fp32
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st.astype(jnp.float32)
+        return s_new, s_prev
+
+    states_sw = jnp.moveaxis(states, 1, 0)                # [nc,Bt,H,N,P]
+    decay_sw = jnp.moveaxis(chunk_decay, 1, 0)            # [nc,Bt,H]
+    init = jnp.zeros((bt, h, n, p), jnp.float32)
+    final_state, prev_states = jax.lax.scan(scan_fn, init,
+                                            (states_sw, decay_sw))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # [Bt,nc,H,N,P]
+
+    # inter-chunk output: C_i · (decay_i * S_prev)
+    in_decay = jnp.exp(cum)                               # [Bt,nc,l,H]
+    y_inter = jnp.einsum("bclhn,bchnp,bclh->bclhp",
+                         Ch, prev_states.astype(x.dtype),
+                         in_decay.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(bt, s, h, p)
+    return y, final_state
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d.  x: [B,S,C]; w: [K,C]; returns (y, new_state)
+    where state is the last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)                # [B,S+K-1,C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _project(params, x):
+    """x: [B,S,D] -> z, xs, B, C, dt (pre-conv, pre-activation)."""
+    z = jnp.einsum("bsd,dk->bsk", x, params["w_z"])
+    xs = jnp.einsum("bsd,dk->bsk", x, params["w_x"])
+    Bm = jnp.einsum("bsd,dk->bsk", x, params["w_B"])
+    Cm = jnp.einsum("bsd,dk->bsk", x, params["w_C"])
+    dt = jnp.einsum("bsd,dk->bsk", x, params["w_dt"])
+    return z, xs, Bm, Cm, dt
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def _ssd_full(params, cfg: MambaConfig, x, conv_state=None, want_state=False):
+    """Shared forward core.  Returns (out, state_dict_or_None)."""
+    b, s, _ = x.shape
+    di, g, n, h, p = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                      cfg.head_dim)
+    z, xs, Bm, Cm, dt = _project(params, x)
+    xs, conv_x = _causal_conv(xs, params["conv_x_w"], params["conv_x_b"],
+                              conv_state["x"] if conv_state else None)
+    Bm, conv_B = _causal_conv(Bm, params["conv_B_w"], params["conv_B_b"],
+                              conv_state["B"] if conv_state else None)
+    Cm, conv_C = _causal_conv(Cm, params["conv_C_w"], params["conv_C_b"],
+                              conv_state["C"] if conv_state else None)
+    xs = xs.reshape(b, s, h, p)
+    Bm = Bm.reshape(b, s, g, n)
+    Cm = Cm.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    # pad to a chunk multiple with dt = 0: dA = 0 so the padded positions
+    # leave the SSM state untouched and the final state stays exact
+    l = cfg.chunk_size
+    pad = (-s) % l
+    if pad:
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, final_state = ssd_chunked(xs_p, dt_p, A, Bm_p, Cm_p, l)
+        y = y[:, :s]
+    else:
+        y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, l)
+    y = y + xs * params["D"][None, None, :, None].astype(x.dtype)
+    y = _gated_norm(y.reshape(b, s, di), z, params["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    if not want_state:
+        return out, None
+    return out, {"ssm": final_state,
+                 "conv": {"x": conv_x, "B": conv_B, "C": conv_C}}
+
+
+def mamba_forward(params, cfg: MambaConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Training forward (no state I/O).  x: [B,S,D]."""
+    return _ssd_full(params, cfg, x)[0]
+
+
+def mamba_prefill(params, cfg: MambaConfig, x: jnp.ndarray):
+    """Prefill returning recurrent state for decode."""
+    return _ssd_full(params, cfg, x, want_state=True)
+
+
+def mamba_decode(params, cfg: MambaConfig, x: jnp.ndarray, state):
+    """Single-token decode.  x: [B,1,D]; state: {"ssm": [B,H,N,P] fp32,
+    "conv": {x/B/C: [B,K-1,·]}}.  O(1) in sequence length — the SSM
+    advantage that makes ``long_500k`` tractable."""
+    b = x.shape[0]
+    di, g, n, h, p = (cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads,
+                      cfg.head_dim)
+    z, xs, Bm, Cm, dt = _project(params, x)
+    xs, conv_x = _causal_conv(xs, params["conv_x_w"], params["conv_x_b"],
+                              state["conv"]["x"])
+    Bm, conv_B = _causal_conv(Bm, params["conv_B_w"], params["conv_B_b"],
+                              state["conv"]["B"])
+    Cm, conv_C = _causal_conv(Cm, params["conv_C_w"], params["conv_C_b"],
+                              state["conv"]["C"])
+    xs = xs.reshape(b, 1, h, p)[:, 0]                           # [B,H,P]
+    Bm = Bm.reshape(b, g, n)
+    Cm = Cm.reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                               # [B,H]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1)                            # [B,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    s_prev = state["ssm"]
+    s_new = (s_prev * dA[..., None, None]
+             + jnp.einsum("bhn,bh,bhp->bhnp", Bh.astype(jnp.float32),
+                          dt, xs.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, s_new.astype(x.dtype))
+    y = y + xs * params["D"][None, :, None].astype(x.dtype)
+    y = _gated_norm(y.reshape(b, 1, di).astype(x.dtype), z,
+                    params["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, {"ssm": s_new, "conv": {"x": conv_x, "B": conv_B,
+                                        "C": conv_C}}

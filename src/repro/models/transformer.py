@@ -1,0 +1,418 @@
+"""Composable decoder stack supporting all 10 assigned architectures.
+
+A model is a *prelude* (irregular leading layers, e.g. DeepSeek's first
+dense layers) followed by ``n_units`` repetitions of a *pattern* (a tuple of
+``LayerSpec``).  The pattern captures hybrid structures:
+
+- jamba:   8-layer unit  (attn, moe), (mamba, dense), (mamba, moe), ...
+- gemma3:  6-layer unit  5×(attn_local, dense) + 1×(attn_global, dense)
+- deepseek: prelude 3×(attn, dense) + unit (attn, moe)
+- mamba2:  unit (mamba, none)
+
+Unit parameters are stacked on a leading axis and the forward pass is a
+``lax.scan`` over units (small HLO, fast compile, remat-friendly) — layers
+inside a unit are unrolled.
+
+Modality frontends ([audio] musicgen, [vlm] paligemma) are STUBS per the
+brief: ``prefix_embeddings`` (precomputed frame/patch embeddings) are
+concatenated in front of the token embeddings.  MusicGen's 4 EnCodec
+codebooks are handled with summed codebook embeddings and 4 parallel output
+heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (AttentionConfig, MLAConfig, gqa_decode,
+                                    gqa_forward, gqa_prefill, make_attention_params,
+                                    mla_decode, mla_forward, mla_prefill)
+from repro.models.layers import (DEFAULT_DTYPE, cross_entropy_loss, embed_init,
+                                 make_mlp_params, mlp_apply, norm_init, rmsnorm)
+from repro.models.mamba import (MambaConfig, make_mamba_params, mamba_decode,
+                                mamba_forward, mamba_prefill)
+from repro.models.moe import MoEConfig, make_moe_params, moe_apply
+
+LayerSpec = tuple[str, str]          # (mixer, ffn)
+
+MIXERS = ("attn", "attn_local", "attn_global", "mla", "mamba")
+FFNS = ("dense", "moe", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    vocab: int
+    pattern: tuple[LayerSpec, ...]
+    prelude: tuple[LayerSpec, ...] = ()
+    attn: AttentionConfig | None = None
+    attn_global: AttentionConfig | None = None   # for attn_global mixer
+    mamba: MambaConfig | None = None
+    moe: MoEConfig | None = None
+    d_ff: int = 0
+    gated_mlp: bool = True
+    n_prefix: int = 0                 # modality-stub prefix tokens
+    codebooks: int = 1                # musicgen: 4
+    tie_embeddings: bool = True
+    mtp: bool = False                 # deepseek multi-token prediction head
+    aux_loss_weight: float = 0.01
+    mtp_loss_weight: float = 0.3
+    dtype: Any = DEFAULT_DTYPE
+    remat: str = "nothing_saveable"   # "none" | "nothing_saveable" | "dots"
+    scan_units: bool = True
+
+    @property
+    def n_units(self) -> int:
+        body = self.n_layers - len(self.prelude)
+        assert body % len(self.pattern) == 0, \
+            f"{self.name}: {body} layers not divisible by unit {len(self.pattern)}"
+        return body // len(self.pattern)
+
+    def mixer_cfg(self, mixer: str) -> AttentionConfig:
+        if mixer == "attn_global" and self.attn_global is not None:
+            return self.attn_global
+        return self.attn
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _make_layer_params(key, cfg: ModelConfig, spec: LayerSpec):
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": norm_init(cfg.d_model)}
+    if mixer == "mamba":
+        p["mixer"] = make_mamba_params(k1, cfg.mamba, cfg.dtype)
+    else:
+        p["mixer"] = make_attention_params(k1, cfg.mixer_cfg(mixer), cfg.dtype)
+    if ffn != "none":
+        p["norm2"] = norm_init(cfg.d_model)
+        if ffn == "moe":
+            p["mlp"] = make_moe_params(k2, cfg.moe, cfg.dtype)
+        else:
+            p["mlp"] = make_mlp_params(k2, cfg.d_model, cfg.d_ff,
+                                       cfg.gated_mlp, cfg.dtype)
+    return p
+
+
+def _make_unit_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, len(cfg.pattern))
+    return [_make_layer_params(k, cfg, spec)
+            for k, spec in zip(keys, cfg.pattern)]
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab * cfg.codebooks, cfg.d_model,
+                            cfg.dtype),
+        "final_norm": norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[1], cfg.vocab * cfg.codebooks,
+                                       cfg.d_model, cfg.dtype)
+    if cfg.prelude:
+        pk = jax.random.split(ks[2], len(cfg.prelude))
+        params["prelude"] = [_make_layer_params(k, cfg, s)
+                             for k, s in zip(pk, cfg.prelude)]
+    # stacked unit params: vmap the unit constructor over unit keys
+    unit_keys = jax.random.split(ks[3], cfg.n_units)
+    params["units"] = jax.vmap(
+        lambda k: _make_unit_params(k, cfg))(unit_keys)
+    if cfg.mtp:
+        params["mtp"] = {
+            "layer": _make_layer_params(ks[4], cfg, cfg.pattern[-1]),
+            "norm": norm_init(cfg.d_model),
+            "in_proj": embed_init(ks[5], 2 * cfg.d_model, cfg.d_model,
+                                  cfg.dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def _layer_forward(p, cfg: ModelConfig, spec: LayerSpec, x, positions):
+    mixer, ffn = spec
+    h = rmsnorm(x, p["norm1"])
+    if mixer == "mamba":
+        h = mamba_forward(p["mixer"], cfg.mamba, h)
+    elif mixer == "mla":
+        h = mla_forward(p["mixer"], cfg.mixer_cfg(mixer), h, positions)
+    else:
+        acfg = cfg.mixer_cfg(mixer)
+        h = gqa_forward(p["mixer"], acfg, h, positions)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = rmsnorm(x, p["norm2"])
+        if ffn == "moe":
+            h, aux = moe_apply(p["mlp"], cfg.moe, h)
+        else:
+            h = mlp_apply(p["mlp"], h)
+        x = x + h
+    return x, aux
+
+
+def _unit_forward(unit_params, cfg: ModelConfig, x, positions):
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.pattern):
+        x, aux = _layer_forward(unit_params[i], cfg, spec, x, positions)
+        aux_total += aux
+    return x, aux_total
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens,
+                 prefix_embeddings=None):
+    """tokens: [B,S] or [B,S,CB] (musicgen).  Returns [B, n_prefix+S, D]."""
+    if cfg.codebooks > 1:
+        # per-codebook vocab offsets, summed embeddings
+        offs = jnp.arange(cfg.codebooks, dtype=tokens.dtype) * cfg.vocab
+        x = jnp.take(params["embed"], tokens + offs[None, None, :], axis=0)
+        x = x.sum(axis=2)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_prefix:
+        assert prefix_embeddings is not None, cfg.name
+        x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+    return x
+
+
+def logits_fn(params, cfg: ModelConfig, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    if cfg.codebooks > 1:
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.codebooks, cfg.vocab)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeddings=None):
+    """Full forward -> logits [B, S(+prefix), V] (training path)."""
+    x = embed_tokens(params, cfg, tokens, prefix_embeddings)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    aux_total = jnp.zeros((), jnp.float32)
+    for p, spec in zip(params.get("prelude", []), cfg.prelude):
+        x, aux = _layer_forward(p, cfg, spec, x, positions)
+        aux_total += aux
+
+    unit_fn = _remat_wrap(
+        lambda up, xx: _unit_forward(up, cfg, xx, positions), cfg)
+
+    if cfg.scan_units:
+        def scan_body(carry, unit_params):
+            xx, aux = unit_fn(unit_params, carry)
+            return xx, aux
+
+        x, auxs = jax.lax.scan(scan_body, x, params["units"])
+        aux_total += jnp.sum(auxs)
+    else:
+        n = cfg.n_units
+        for i in range(n):
+            up = jax.tree_util.tree_map(lambda a: a[i], params["units"])
+            x, aux = unit_fn(up, x)
+            aux_total += aux
+
+    x = rmsnorm(x, params["final_norm"])
+    return logits_fn(params, cfg, x), aux_total, x
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: {"tokens": [B,S] or [B,S,CB], "labels": same,
+    "prefix_embeddings": optional [B,P,D]}."""
+    logits, aux, x = forward(params, cfg, batch["tokens"],
+                             batch.get("prefix_embeddings"))
+    labels = batch["labels"]
+    if cfg.n_prefix:
+        logits = logits[:, cfg.n_prefix:]
+    if cfg.codebooks > 1:
+        loss = cross_entropy_loss(logits, labels)
+    else:
+        loss = cross_entropy_loss(logits, labels)
+    total = loss + cfg.aux_loss_weight * aux
+    if cfg.mtp and "mtp" in params:
+        total = total + cfg.mtp_loss_weight * _mtp_loss(params, cfg, x, batch)
+    metrics = {"loss": loss, "aux": aux}
+    return total, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, x, batch):
+    """DeepSeek-V3 multi-token prediction: one extra layer predicts t+2 from
+    (hidden_t ⊕ embed(token_{t+1}))."""
+    mtp = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    if cfg.codebooks > 1 or cfg.n_prefix:
+        return jnp.zeros((), jnp.float32)
+    # inputs: hidden states at t (already computed), token t+1 embedding
+    emb_next = jnp.take(params["embed"], labels, axis=0)     # labels = t+1
+    h = jnp.concatenate([x, emb_next.astype(x.dtype)], axis=-1)
+    h = jnp.einsum("bsd,dk->bsk", h, mtp["in_proj"])
+    positions = jnp.arange(h.shape[1])
+    h, _ = _layer_forward(mtp["layer"], cfg, cfg.pattern[-1], h, positions)
+    h = rmsnorm(h, mtp["norm"])
+    logits2 = logits_fn(params, cfg, h)
+    # predict t+2: shift labels by one more
+    lab2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+    return cross_entropy_loss(logits2[:, :-1], lab2[:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _layer_prefill(p, cfg, spec, x, positions):
+    mixer, ffn = spec
+    h = rmsnorm(x, p["norm1"])
+    if mixer == "mamba":
+        h, cache = mamba_prefill(p["mixer"], cfg.mamba, h)
+    elif mixer == "mla":
+        h, cache = mla_prefill(p["mixer"], cfg.mixer_cfg(mixer), h, positions)
+    else:
+        h, cache = gqa_prefill(p["mixer"], cfg.mixer_cfg(mixer), h, positions)
+    x = x + h
+    if ffn != "none":
+        h = rmsnorm(x, p["norm2"])
+        h = moe_apply(p["mlp"], cfg.moe, h)[0] if ffn == "moe" \
+            else mlp_apply(p["mlp"], h)
+        x = x + h
+    return x, cache
+
+
+def _pad_cache(cache, max_len: int, prefill_len: int):
+    """Grow attention caches from prefill length to max_len (decode room)."""
+    def pad(a):
+        return a
+
+    out = {}
+    for k, v in cache.items():
+        if k in ("k", "v", "c", "k_rope"):
+            pad_width = [(0, 0)] * v.ndim
+            pad_width[1] = (0, max_len - v.shape[1])
+            out[k] = jnp.pad(v, pad_width)
+        else:
+            out[k] = v
+    return out
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_embeddings=None,
+            max_len: int | None = None):
+    """Run the prompt; returns (last_logits [B,V or CB,V], caches, length)."""
+    x = embed_tokens(params, cfg, tokens, prefix_embeddings)
+    s = x.shape[1]
+    max_len = max_len or s + 1
+    positions = jnp.arange(s)
+    caches: dict[str, Any] = {}
+    pre = []
+    for p, spec in zip(params.get("prelude", []), cfg.prelude):
+        x, cache = _layer_prefill(p, cfg, spec, x, positions)
+        pre.append(_pad_cache(cache, max_len, s))
+    caches["prelude"] = pre
+
+    def unit_prefill(up, xx):
+        unit_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            xx, cache = _layer_prefill(up[i], cfg, spec, xx, positions)
+            unit_caches.append(_pad_cache(cache, max_len, s))
+        return xx, unit_caches
+
+    if cfg.scan_units:
+        x, unit_caches = jax.lax.scan(
+            lambda carry, up: unit_prefill(up, carry), x, params["units"])
+    else:
+        collected = []
+        for i in range(cfg.n_units):
+            up = jax.tree_util.tree_map(lambda a: a[i], params["units"])
+            x, uc = unit_prefill(up, x)
+            collected.append(uc)
+        unit_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *collected)
+    caches["units"] = unit_caches
+    x = rmsnorm(x, params["final_norm"])
+    logits = logits_fn(params, cfg, x[:, -1:])[:, 0]
+    return logits, caches, s
+
+
+def _layer_decode(p, cfg, spec, x, cache, cache_len):
+    mixer, ffn = spec
+    h = rmsnorm(x, p["norm1"])
+    if mixer == "mamba":
+        h, cache = mamba_decode(p["mixer"], cfg.mamba, h, cache)
+    elif mixer == "mla":
+        h, cache = mla_decode(p["mixer"], cfg.mixer_cfg(mixer), h, cache,
+                              cache_len)
+    else:
+        h, cache = gqa_decode(p["mixer"], cfg.mixer_cfg(mixer), h, cache,
+                              cache_len)
+    x = x + h
+    if ffn != "none":
+        h = rmsnorm(x, p["norm2"])
+        h = moe_apply(p["mlp"], cfg.moe, h)[0] if ffn == "moe" \
+            else mlp_apply(p["mlp"], h)
+        x = x + h
+    return x, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, cache_len):
+    """One decode step.  token: [B] or [B,CB]; caches from prefill;
+    cache_len: scalar int32 current length.  Returns (logits, new caches)."""
+    if cfg.codebooks > 1:
+        offs = jnp.arange(cfg.codebooks, dtype=token.dtype) * cfg.vocab
+        x = jnp.take(params["embed"], token + offs[None, :], axis=0).sum(axis=1)
+        x = x[:, None, :]
+    else:
+        x = jnp.take(params["embed"], token, axis=0)[:, None, :]
+    new_caches: dict[str, Any] = {"prelude": []}
+    for p, spec, cache in zip(params.get("prelude", []), cfg.prelude,
+                              caches.get("prelude", [])):
+        x, cache = _layer_decode(p, cfg, spec, x, cache, cache_len)
+        new_caches["prelude"].append(cache)
+
+    def unit_decode(carry, inp):
+        xx = carry
+        up, unit_cache = inp
+        new_unit_cache = []
+        for i, spec in enumerate(cfg.pattern):
+            xx, c = _layer_decode(up[i], cfg, spec, xx, unit_cache[i],
+                                  cache_len)
+            new_unit_cache.append(c)
+        return xx, new_unit_cache
+
+    if cfg.scan_units:
+        x, new_unit_caches = jax.lax.scan(
+            unit_decode, x, (params["units"], caches["units"]))
+    else:
+        collected = []
+        for i in range(cfg.n_units):
+            up = jax.tree_util.tree_map(lambda a: a[i], params["units"])
+            uc = jax.tree_util.tree_map(lambda a: a[i], caches["units"])
+            x, nc = unit_decode(x, (up, uc))
+            collected.append(nc)
+        new_unit_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *collected)
+    new_caches["units"] = new_unit_caches
+    x = rmsnorm(x, params["final_norm"])
+    logits = logits_fn(params, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,173 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (deliverable g):
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+Hardware constants (TPU v5e, per the brief): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+``cost_analysis()`` FLOPs/bytes from an SPMD-partitioned module are
+per-partition (one device's program); collective bytes are parsed from the
+optimized HLO by summing operand sizes of every collective op.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes / s / chip
+LINK_BW = 50e9             # bytes / s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+# e.g. "bf16[2,4096,128]{2,1,0} all-gather(" — capture dtype + dims of the
+# RESULT (a good proxy for payload; operands of fusions are harder to trace)
+_SHAPE_RE = re.compile(
+    r"^\s*%?\S+\s*=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum result-payload bytes of every collective op in optimized HLO,
+    keyed by op kind.  (Per-device program → per-device bytes.)"""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.lstrip()
+        if "=" not in stripped:
+            continue
+        kind = None
+        for op in _COLLECTIVE_OPS:
+            # match " op(" or " op-start(" to skip *-done ops (same payload
+            # would be double-counted)
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                kind = op
+                break
+        if kind is None:
+            continue
+        # result shape(s) before the '='-RHS
+        lhs = stripped.split("=", 1)[0]
+        rhs_head = stripped.split("=", 1)[1]
+        # parse first shape annotation on the RHS (the result type)
+        m = _TUPLE_SHAPE_RE.findall(rhs_head.split("(", 1)[0])
+        total = sum(_shape_bytes(dt, dims) for dt, dims in m)
+        out[kind] += total
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), D = tokens
+    processed.  For decode shapes D = global_batch (one token each)."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch
+    return 2.0 * n_active * tokens
+
+
+def active_params(cfg) -> float:
+    """Per-token active parameter count (MoE: top-k of routed experts)."""
+    import jax
+
+    from repro.models.transformer import init_params
+    shapes = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    total = 0
+    moe_total = 0
+    n_experts = cfg.moe.n_experts if cfg.moe is not None else -1
+
+    def visit(path, leaf):
+        nonlocal total, moe_total
+        n = math.prod(leaf.shape)
+        names = [str(getattr(k, "key", "")) for k in path]
+        # routed-expert leaves carry an n_experts axis (possibly behind the
+        # scan-stacked [n_units] axis)
+        is_expert = (any(n_ == "mlp" for n_ in names)
+                     and n_experts > 0 and leaf.ndim >= 3
+                     and n_experts in leaf.shape[:-2])
+        if is_expert:
+            moe_total += n
+        else:
+            total += n
+
+    jax.tree_util.tree_map_with_path(visit, shapes)
+    if cfg.moe is not None and moe_total:
+        active_frac = cfg.moe.top_k / cfg.moe.n_experts
+        total += moe_total * active_frac
+    return float(total)
+
+
+def roofline_terms(entry: dict[str, Any], cfg=None) -> dict[str, Any]:
+    """Derive the three roofline terms for one dry-run entry (per-device
+    quantities / per-chip rates)."""
+    flops = entry.get("flops", 0.0)
+    # memory term: prefer the analytical HBM model — XLA CPU "bytes
+    # accessed" is fusion-naive (counts every op's operands; the TPU
+    # backend fuses these into far fewer HBM round trips) and would
+    # overstate the term ~50×.  The probe value stays in the entry as
+    # an upper bound.
+    bytes_acc = entry.get("hbm_model_bytes",
+                          entry.get("bytes_accessed", 0.0))
+    coll = entry.get("collective_bytes", {})
+    coll_total = float(sum(coll.values()))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_total / LINK_BW
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)], key=lambda kv: kv[1])[0]
+    out = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }
+    if cfg is not None:
+        from repro.configs.base import SHAPES
+        shape = SHAPES[entry["shape"]]
+        mf = model_flops(cfg, shape)
+        n_dev = entry.get("n_devices", 1)
+        out["model_flops_global"] = mf
+        # per-device compiled flops vs per-device share of useful flops
+        useful_per_dev = mf / max(n_dev, 1)
+        out["useful_flops_ratio"] = (useful_per_dev / flops) if flops else 0.0
+        bound = max(t_compute, t_memory, t_coll)
+        ideal_compute = useful_per_dev / PEAK_FLOPS      # MFU-style limit
+        # MBU-style limit: minimum unavoidable HBM traffic (weights + KV
+        # read once per step) — THE roofline for decode
+        min_bytes = entry.get("min_hbm_bytes",
+                              entry.get("param_bytes_per_dev", 0.0))
+        ideal_memory = min_bytes / HBM_BW
+        out["ideal_compute_s"] = ideal_compute
+        out["ideal_memory_s"] = ideal_memory
+        out["roofline_fraction"] = (max(ideal_compute, ideal_memory) / bound
+                                    if bound > 0 else 0.0)
+    return out

@@ -1,0 +1,119 @@
+"""Multi-device correctness: runs subprocesses with
+--xla_force_host_platform_device_count=8 so sharded code paths execute on a
+real (emulated) 8-device mesh and must agree with single-device references.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+class TestShardMapMoEMultiDevice:
+    def test_ep_dispatch_matches_plain_8dev(self):
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.models.moe import MoEConfig, make_moe_params, moe_apply, moe_apply_shardmap
+assert len(jax.devices()) == 8, jax.devices()
+cfg = MoEConfig(d_model=32, n_experts=8, top_k=2, d_ff_expert=16,
+                capacity_factor=8.0)
+p = make_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+ref, aux_ref = moe_apply(p, cfg, x)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+with mesh:
+    for mode in ("train", "serve"):
+        out, aux = moe_apply_shardmap(p, cfg, x, mesh, ("data",), mode)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
+        assert abs(float(aux) - float(aux_ref)) < 0.15 * float(aux_ref) + 1e-3
+print("OK")
+"""
+        assert "OK" in _run(code)
+
+    def test_train_step_fsdp_tp_runs_8dev(self):
+        """One real sharded train step (FSDP+TP) must run and produce a
+        finite loss equal to the single-device step."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding
+from repro.configs import get_reduced_config
+from repro.launch.shardings import param_shardings, batch_spec
+from repro.models.transformer import init_params, loss_fn
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+cfg = get_reduced_config("yi-6b")
+key = jax.random.PRNGKey(0)
+params = init_params(key, cfg)
+batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab)}
+batch["labels"] = batch["tokens"]
+loss_single, _ = loss_fn(params, cfg, batch)
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+pshard = param_shardings(jax.tree_util.tree_map(
+    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params), mesh, cfg=cfg)
+bshard = {k: NamedSharding(mesh, batch_spec(mesh, v.ndim))
+          for k, v in batch.items()}
+ocfg = AdamWConfig()
+
+def step(p, o, b):
+    (l, m), g = jax.value_and_grad(lambda pp: loss_fn(pp, cfg, b),
+                                   has_aux=True)(p)
+    np_, no, gn = adamw_update(g, o, p, ocfg)
+    return np_, no, l
+
+with mesh:
+    p_sh = jax.device_put(params, pshard)
+    o_sh = jax.device_put(adamw_init(params, ocfg),
+                          param_shardings(jax.tree_util.tree_map(
+                              lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                              adamw_init(params, ocfg)), mesh, cfg=cfg))
+    b_sh = {k: jax.device_put(v, bshard[k]) for k, v in batch.items()}
+    jitted = jax.jit(step, in_shardings=(pshard, None, bshard))
+    p2, o2, loss = jitted(p_sh, o_sh, b_sh)
+assert np.isfinite(float(loss))
+np.testing.assert_allclose(float(loss), float(loss_single), rtol=2e-2)
+print("OK", float(loss))
+"""
+        assert "OK" in _run(code)
+
+    def test_compressed_psum_2pods(self):
+        """int8 compressed psum over a real 2-pod axis: the reduction of
+        per-pod-varying gradients must equal the true sum within
+        quantization error."""
+        code = """
+import jax, jax.numpy as jnp, numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.distributed.compression import compressed_psum
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+rng = np.random.default_rng(0)
+g_np = rng.normal(0, 1, (2, 64)).astype(np.float32)   # one grad per pod
+
+def inner(g_local):
+    return compressed_psum(g_local[0], "pod")[None]
+
+with mesh:
+    out = shard_map(inner, mesh=mesh,
+                    in_specs=P("pod", None), out_specs=P("pod", None),
+                    check_vma=False)(jnp.asarray(g_np))
+want = g_np.sum(axis=0)
+got = np.asarray(out)
+np.testing.assert_allclose(got[0], want, atol=8e-2)
+np.testing.assert_allclose(got[1], want, atol=8e-2)
+print("OK")
+"""
+        assert "OK" in _run(code)

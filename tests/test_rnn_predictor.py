@@ -1,0 +1,30 @@
+"""GRU predictor (paper §VI future work) sanity tests."""
+import numpy as np
+import pytest
+
+from repro.core.rnn_predictor import GRUPredictor, predict_next_timestamp_rnn
+
+
+class TestGRUPredictor:
+    def test_constant_series_shortcut(self):
+        ts = np.arange(50) * 600.0
+        pred = predict_next_timestamp_rnn(ts)
+        assert pred == pytest.approx(ts[-1] + 600.0, rel=0.01)
+
+    def test_noisy_periodic(self):
+        rng = np.random.default_rng(0)
+        gaps = 3600.0 + rng.normal(0, 300.0, 64)
+        ts = np.concatenate([[0.0], np.cumsum(gaps)])
+        pred = predict_next_timestamp_rnn(ts)
+        assert pred - ts[-1] == pytest.approx(3600.0, rel=0.3)
+
+    def test_finite_on_irregular(self):
+        rng = np.random.default_rng(1)
+        ts = np.cumsum(rng.exponential(100.0, 40))
+        pred = predict_next_timestamp_rnn(ts)
+        assert np.isfinite(pred) and pred >= ts[-1]
+
+    def test_forecast_bounded(self):
+        g = GRUPredictor()
+        out = g.forecast_next(np.array([10.0, 20.0, 15.0, 30.0, 25.0] * 8))
+        assert np.isfinite(out)

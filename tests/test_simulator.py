@@ -1,0 +1,115 @@
+"""Integration tests: the VDC simulator reproduces the paper's qualitative
+results (§V-B) on a reduced trace."""
+import pytest
+
+from repro.core import SimConfig, make_trace, run_strategy
+from repro.core.trace import OOI_PROFILE
+
+
+@pytest.fixture(scope="module")
+def ooi_split():
+    tr = make_trace("ooi", seed=0, scale=0.06)
+    split = int(len(tr) * 0.3)
+    return tr[:split], tr[split:]
+
+
+def _cfg(test, **kw):
+    kw.setdefault("cache_bytes", 1 << 30)
+    cfg = SimConfig(
+        stream_rate_bytes_per_s=OOI_PROFILE.bytes_per_second_stream,
+        **kw,
+    )
+    return cfg.calibrate_origin(test)
+
+
+@pytest.fixture(scope="module")
+def results(ooi_split):
+    train, test = ooi_split
+    cfg = _cfg(test)
+    return {
+        s: run_strategy(s, test, OOI_PROFILE.grid, cfg, train)
+        for s in ("no_cache", "cache_only", "md1", "md2", "hpm")
+    }
+
+
+class TestPaperOrdering:
+    """Figures 9-12 + Table III qualitative claims."""
+
+    def test_cache_beats_no_cache_throughput(self, results):
+        assert results["cache_only"].mean_throughput_mbps > \
+            10 * results["no_cache"].mean_throughput_mbps
+
+    def test_hpm_best_throughput(self, results):
+        for other in ("no_cache", "cache_only", "md1", "md2"):
+            assert results["hpm"].mean_throughput_mbps > \
+                results[other].mean_throughput_mbps
+
+    def test_hpm_best_recall(self, results):
+        assert results["hpm"].recall > results["md2"].recall
+        assert results["hpm"].recall > results["md1"].recall
+
+    def test_md2_recall_beats_md1(self, results):
+        # association-rule model beats Markov (paper §V-B1)
+        assert results["md2"].recall > results["md1"].recall
+
+    def test_latency_reduction(self, results):
+        assert results["hpm"].mean_latency_s < results["no_cache"].mean_latency_s
+
+    def test_origin_request_reduction_table3(self, results):
+        """Normalized origin requests: no_cache=1 > cache_only > hpm."""
+        assert results["no_cache"].normalized_origin_requests == pytest.approx(1.0)
+        assert results["cache_only"].normalized_origin_requests < 1.0
+        assert results["hpm"].normalized_origin_requests < \
+            results["cache_only"].normalized_origin_requests
+
+    def test_prefetch_increases_local_access(self, results):
+        """Fig 13: prefetching raises the local-access fraction."""
+        c0, p0 = results["cache_only"].local_access_frac
+        c1, p1 = results["hpm"].local_access_frac
+        assert p0 == 0.0
+        assert c1 + p1 > c0
+
+    def test_streaming_absorbs_realtime(self, results):
+        assert results["hpm"].stream_pushes > 0
+
+
+class TestCacheSizeSweep:
+    def test_bigger_cache_not_worse(self, ooi_split):
+        train, test = ooi_split
+        small = run_strategy("cache_only", test, OOI_PROFILE.grid,
+                             _cfg(test, cache_bytes=64 << 20), train)
+        big = run_strategy("cache_only", test, OOI_PROFILE.grid,
+                           _cfg(test, cache_bytes=8 << 30), train)
+        assert big.mean_throughput_mbps >= small.mean_throughput_mbps * 0.98
+
+    def test_lru_beats_lfu_small_cache(self, ooi_split):
+        """Paper §V-B1: recency wins at small cache sizes for moving-window
+        consumers."""
+        train, test = ooi_split
+        lru = run_strategy("cache_only", test, OOI_PROFILE.grid,
+                           _cfg(test, cache_bytes=64 << 20,
+                                cache_policy="lru"), train)
+        lfu = run_strategy("cache_only", test, OOI_PROFILE.grid,
+                           _cfg(test, cache_bytes=64 << 20,
+                                cache_policy="lfu"), train)
+        assert lru.mean_throughput_mbps >= lfu.mean_throughput_mbps
+
+
+class TestNetworkConditions:
+    def test_prefetch_tolerates_bandwidth_loss(self, ooi_split):
+        """Table V: HPM throughput at medium bandwidth ~= best; no_cache
+        degrades with bandwidth."""
+        train, test = ooi_split
+        best = run_strategy("hpm", test, OOI_PROFILE.grid,
+                            _cfg(test, bandwidth_scale=1.0), train)
+        med = run_strategy("hpm", test, OOI_PROFILE.grid,
+                           _cfg(test, bandwidth_scale=0.5), train)
+        assert med.mean_throughput_mbps > 0.6 * best.mean_throughput_mbps
+
+    def test_no_cache_sensitive_to_bandwidth(self, ooi_split):
+        train, test = ooi_split
+        best = run_strategy("no_cache", test, OOI_PROFILE.grid,
+                            _cfg(test, bandwidth_scale=1.0), train)
+        worst = run_strategy("no_cache", test, OOI_PROFILE.grid,
+                             _cfg(test, bandwidth_scale=0.01), train)
+        assert worst.mean_throughput_mbps < best.mean_throughput_mbps

@@ -1,0 +1,78 @@
+"""Reproduction of paper §III: the analysis pipeline must recover the
+published Table I / Table II statistics from the calibrated synthetic traces.
+"""
+import pytest
+
+from repro.core import make_trace, summarize_trace
+from repro.core.trace import GAGE_PROFILE, OOI_PROFILE
+
+TOL = 0.05  # absolute tolerance on fractions
+
+
+@pytest.fixture(scope="module")
+def ooi_summary():
+    return summarize_trace(make_trace("ooi", seed=0, scale=0.1))
+
+
+@pytest.fixture(scope="module")
+def gage_summary():
+    return summarize_trace(make_trace("gage", seed=0, scale=0.1))
+
+
+class TestTableI:
+    def test_ooi_user_split(self, ooi_summary):
+        assert ooi_summary.human_user_frac == pytest.approx(0.867, abs=TOL)
+
+    def test_ooi_volume_split(self, ooi_summary):
+        assert ooi_summary.program_volume_frac == pytest.approx(0.901, abs=TOL)
+
+    def test_gage_user_split(self, gage_summary):
+        assert gage_summary.human_user_frac == pytest.approx(0.941, abs=TOL)
+
+    def test_gage_volume_split(self, gage_summary):
+        assert gage_summary.program_volume_frac == pytest.approx(0.906, abs=TOL)
+
+
+class TestTableII:
+    def test_ooi_type_mix(self, ooi_summary):
+        mix = ooi_summary.type_volume_frac
+        assert mix.get("regular", 0) == pytest.approx(0.138, abs=TOL)
+        assert mix.get("realtime", 0) == pytest.approx(0.257, abs=TOL)
+        assert mix.get("overlapping", 0) == pytest.approx(0.608, abs=TOL)
+
+    def test_gage_type_mix(self, gage_summary):
+        mix = gage_summary.type_volume_frac
+        assert mix.get("regular", 0) == pytest.approx(0.772, abs=TOL)
+        assert mix.get("realtime", 0) == pytest.approx(0.061, abs=TOL)
+        assert mix.get("overlapping", 0) == pytest.approx(0.172, abs=TOL)
+
+    def test_ooi_duplicate_frac(self, ooi_summary):
+        assert ooi_summary.overlap_duplicate_frac == pytest.approx(0.904, abs=TOL)
+
+    def test_gage_duplicate_frac(self, gage_summary):
+        assert gage_summary.overlap_duplicate_frac == pytest.approx(0.896, abs=TOL)
+
+
+class TestTraceShape:
+    def test_requests_sorted(self):
+        tr = make_trace("ooi", seed=1, scale=0.05)
+        assert all(a.ts <= b.ts for a, b in zip(tr, tr[1:]))
+
+    def test_sizes_positive(self):
+        tr = make_trace("gage", seed=1, scale=0.05)
+        assert all(r.size_bytes >= 1 for r in tr)
+        assert all(r.tr_end >= r.tr_start for r in tr)
+
+    def test_continents_valid(self):
+        tr = make_trace("ooi", seed=2, scale=0.05)
+        assert {r.continent for r in tr} <= set(range(6))
+
+    def test_deterministic(self):
+        a = make_trace("ooi", seed=3, scale=0.05)
+        b = make_trace("ooi", seed=3, scale=0.05)
+        assert a == b
+
+    def test_object_grid_bounds(self):
+        tr = make_trace("ooi", seed=0, scale=0.05)
+        n = OOI_PROFILE.grid.n_objects
+        assert all(0 <= r.obj < n for r in tr)
