@@ -1,0 +1,172 @@
+"""Replay-engine benchmark: reference (per-chunk dict/heap) vs vectorized
+(array batch-replay) on OOI and GAGE profiles.
+
+Measures end-to-end ``run_strategy`` throughput (requests/second) for both
+engines on the same trace/config, interleaving repetitions and keeping the
+best time per engine so shared-machine noise cannot bias the ratio.  Each
+scenario also cross-checks that both engines produced identical integer
+counters — the benchmark doubles as an equivalence audit at full scale.
+
+Writes ``BENCH_engine.json`` at the repo root.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_engine.py            # full matrix
+    PYTHONPATH=src python benchmarks/bench_engine.py --smoke    # CI quick run
+    PYTHONPATH=src python benchmarks/bench_engine.py --engine vector
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import gc
+import json
+import math
+import os
+import platform
+import time
+
+from repro.core import SimConfig, make_trace, run_strategy
+from repro.core.trace import (GAGE_PROFILE, OOI_PROFILE, TraceGenerator,
+                              TraceProfile)
+
+# "ooi_rt" stresses the real-time traffic class (paper Table II: 25.7% of
+# OOI volume is real-time polling; here it dominates): many tiny
+# single-chunk requests, the flat-cost regime of the serving path.
+OOI_RT_PROFILE = dataclasses.replace(
+    OOI_PROFILE, name="ooi_rt", n_users=200,
+    type_volume_mix=(0.1, 0.8, 0.1))
+
+PROFILES: dict[str, TraceProfile] = {
+    "ooi": OOI_PROFILE, "gage": GAGE_PROFILE, "ooi_rt": OOI_RT_PROFILE,
+}
+
+# (trace, strategy, chunk_seconds, cache_bytes, trace_scale)
+FULL_SCENARIOS = [
+    ("ooi", "cache_only", 3600.0, 128 << 30, 1.0),
+    ("ooi", "cache_only", 900.0, 128 << 30, 1.0),
+    ("ooi", "cache_only", 300.0, 128 << 30, 1.0),
+    ("ooi", "cache_only", 3600.0, 8 << 30, 1.0),
+    ("gage", "cache_only", 3600.0, 128 << 30, 1.0),
+    ("ooi_rt", "cache_only", 3600.0, 128 << 30, 1.0),
+    ("ooi", "no_cache", 3600.0, 128 << 30, 1.0),
+    ("ooi", "hpm", 3600.0, 128 << 30, 0.25),
+]
+
+SMOKE_SCENARIOS = [
+    ("ooi", "cache_only", 3600.0, 128 << 30, 0.08),
+    ("gage", "cache_only", 3600.0, 128 << 30, 0.08),
+    ("ooi", "hpm", 3600.0, 128 << 30, 0.05),
+]
+
+_SPLITS: dict = {}
+
+
+def get_split(trace: str, scale: float):
+    key = (trace, scale)
+    if key not in _SPLITS:
+        if trace in ("ooi", "gage"):
+            tr = make_trace(trace, seed=0, scale=scale)
+        else:
+            profile = PROFILES[trace]
+            if scale != 1.0:
+                profile = dataclasses.replace(
+                    profile, n_users=max(8, int(profile.n_users * scale)))
+            tr = TraceGenerator(profile, seed=0).generate()
+        cut = int(len(tr) * 0.3)
+        _SPLITS[key] = (tr[:cut], tr[cut:])
+    return _SPLITS[key]
+
+
+def _counters(res) -> tuple:
+    return (res.origin_requests, res.prefetch_issued_chunks,
+            res.prefetch_used_chunks, res.stream_pushes,
+            tuple(sorted((d, s.hits, s.misses, s.evictions,
+                          s.inserted_bytes)
+                         for d, s in res.cache_stats.items())))
+
+
+def run_scenario(trace: str, strategy: str, chunk_seconds: float,
+                 cache_bytes: int, scale: float, engines: list[str],
+                 reps: int) -> dict:
+    profile = PROFILES[trace]
+    train, test = get_split(trace, scale)
+    best: dict[str, float] = {e: float("inf") for e in engines}
+    counters: dict[str, tuple] = {}
+    for _ in range(reps):
+        for engine in engines:
+            gc.collect()
+            cfg = SimConfig(
+                stream_rate_bytes_per_s=profile.bytes_per_second_stream,
+                cache_bytes=cache_bytes,
+                chunk_seconds=chunk_seconds,
+            ).calibrate_origin(test)
+            t0 = time.perf_counter()
+            res = run_strategy(strategy, test, profile.grid, cfg, train,
+                               engine=engine)
+            best[engine] = min(best[engine], time.perf_counter() - t0)
+            counters[engine] = _counters(res)
+    if len(engines) == 2:
+        assert counters["vector"] == counters["reference"], (
+            f"engine divergence in {trace}/{strategy}: "
+            f"{counters['vector']} != {counters['reference']}")
+    n = len(test)
+    row = dict(trace=trace, strategy=strategy, chunk_seconds=chunk_seconds,
+               cache_gb=cache_bytes >> 30, trace_scale=scale, n_requests=n,
+               counters_match=len(engines) != 2 or
+               counters["vector"] == counters["reference"])
+    for e in engines:
+        row[f"{e}_rps"] = round(n / best[e], 1)
+        row[f"{e}_seconds"] = round(best[e], 3)
+    if len(engines) == 2:
+        row["speedup"] = round(best["reference"] / best["vector"], 2)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces, single rep (CI regression check)")
+    ap.add_argument("--engine", choices=["both", "vector", "reference"],
+                    default="both")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="repetitions per engine (default: 2 full, 1 smoke)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_engine.json)")
+    args = ap.parse_args()
+
+    engines = ["vector", "reference"] if args.engine == "both" else [args.engine]
+    scenarios = SMOKE_SCENARIOS if args.smoke else FULL_SCENARIOS
+    reps = args.reps or (1 if args.smoke else 2)
+    rows = []
+    for sc in scenarios:
+        row = run_scenario(*sc, engines=engines, reps=reps)
+        rows.append(row)
+        print(json.dumps(row))
+
+    out = dict(
+        benchmark="replay-engine",
+        mode="smoke" if args.smoke else "full",
+        engines=engines,
+        reps=reps,
+        host=dict(machine=platform.machine(),
+                  cpus=os.cpu_count()),
+        scenarios=rows,
+    )
+    if len(engines) == 2:
+        sp = [r["speedup"] for r in rows]
+        out["speedup_max"] = max(sp)
+        out["speedup_min"] = min(sp)
+        out["speedup_geomean"] = round(math.prod(sp) ** (1.0 / len(sp)), 2)
+        out["all_counters_match"] = all(r["counters_match"] for r in rows)
+    path = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.abspath(path)}")
+    if len(engines) == 2:
+        print(f"speedup: min {out['speedup_min']}x  "
+              f"geomean {out['speedup_geomean']}x  max {out['speedup_max']}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,10 @@ def main():
     ap.add_argument("--trace", default="ooi", choices=["ooi", "gage"])
     ap.add_argument("--scale", type=float, default=0.06)
     ap.add_argument("--cache-mb", type=int, default=1024)
+    ap.add_argument("--engine", default="vector",
+                    choices=["vector", "reference"],
+                    help="replay engine (vector = array batch-replay, "
+                         "reference = per-chunk dict/heap baseline)")
     args = ap.parse_args()
 
     profile = OOI_PROFILE if args.trace == "ooi" else GAGE_PROFILE
@@ -28,12 +32,14 @@ def main():
         cache_bytes=args.cache_mb << 20,
         stream_rate_bytes_per_s=profile.bytes_per_second_stream,
     ).calibrate_origin(test)
-    print(f"{args.trace}: {len(test)} requests, cache {args.cache_mb} MB")
+    print(f"{args.trace}: {len(test)} requests, cache {args.cache_mb} MB, "
+          f"engine {args.engine}")
     print(f"{'strategy':12s} {'thr Mbps':>12s} {'latency s':>10s} "
           f"{'recall':>7s} {'origin':>7s} {'local%':>7s}")
     for strat in ("no_cache", "cache_only", "md1", "md2", "hpm"):
         t0 = time.time()
-        res = run_strategy(strat, test, profile.grid, cfg, train)
+        res = run_strategy(strat, test, profile.grid, cfg, train,
+                           engine=args.engine)
         c, p = res.local_access_frac
         print(f"{strat:12s} {res.mean_throughput_mbps:12.1f} "
               f"{res.mean_latency_s:10.2f} {res.recall:7.3f} "

@@ -3,7 +3,10 @@
 Public API re-exports.
 """
 from repro.core.arima import ARIMA, ARIMAOrder, predict_next_timestamp
-from repro.core.cache import LFUCache, LRUCache, chunks_for_range, make_cache
+from repro.core.cache import (IntLFUState, IntLRUState, LFUCache, LRUCache,
+                              chunk_bounds_bulk, chunks_for_range, make_cache,
+                              make_int_cache_state)
+from repro.core.engine import VectorVDCSimulator
 from repro.core.classify import (classify_request_type, classify_users,
                                  fresh_duplicate_bytes, summarize_trace)
 from repro.core.delivery import (HPMAdapter, MD1Adapter, MD2Adapter,
@@ -17,6 +20,7 @@ from repro.core.placement import PlacementEngine, select_hub
 from repro.core.simulator import SimConfig, SimResult, VDCSimulator, run_strategy
 from repro.core.streaming import StreamingEngine
 from repro.core.trace import (GAGE_PROFILE, OOI_PROFILE, ObjectGrid, Request,
-                              TraceGenerator, make_trace)
+                              RequestArrays, TraceGenerator, make_trace,
+                              requests_to_arrays)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

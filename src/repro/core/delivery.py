@@ -29,6 +29,9 @@ class Prefetcher(Protocol):
 
 class NoPrefetch:
     name = "none"
+    # never emits ops nor streams: the vectorized engine may replay whole
+    # request blocks at once instead of walking the event loop
+    static = True
 
     def observe(self, r: Request) -> list[PrefetchOp]:
         return []

@@ -1,0 +1,925 @@
+"""Vectorized batch-replay engine for the VDC simulator.
+
+:class:`repro.core.simulator.VDCSimulator` is the readable reference: every
+chunk of every request walks through per-key Python dict/heap operations.
+That caps replay at a few thousand requests/second — far from the paper's
+17.9M-request (OOI) and 77.8M-request (GAGE) traces (§V-A1).
+
+This module replays the same discrete-event semantics on array state:
+
+- chunk ranges for the *whole* trace are precomputed in bulk
+  (:func:`repro.core.cache.chunk_bounds_bulk`);
+- each DTN cache is an :class:`repro.core.cache.IntCacheState` — presence,
+  recency and sizes in flat NumPy arrays keyed by dense chunk ids
+  ``obj * span + chunk + offset``, with batch touch/insert/evict;
+- presence of all DTNs lives in one ``[n_dtn, n_keys]`` matrix so peer
+  lookups (paper §IV-D resolution order) gather across every cache at once;
+- strategies with no dynamic events (no_cache / cache_only) skip the event
+  heap entirely and replay in *blocks*: a vectorized membership pass finds
+  the longest all-hit prefix, which is retired with a handful of NumPy ops,
+  and only the first missing request falls back to the per-request path;
+- strategies with prefetch/streaming/placement (md1 / md2 / hpm) keep exact
+  event ordering by merging the pre-sorted request arrays with a small heap
+  of dynamic events, serving each event on chunk-id arrays.
+
+Result equivalence with the reference engine is part of the contract (and
+covered by ``tests/test_engine_equivalence.py``): identical integer counters
+(origin requests, hits/misses/evictions, prefetch issue/use, byte splits)
+and float aggregates equal to within summation-order rounding.  The same
+prefetcher / streaming / placement model objects are used by both engines,
+so the prediction layer cannot diverge.
+"""
+from __future__ import annotations
+
+import collections
+import collections.abc
+import heapq
+import itertools
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.cache import (CacheStats, chunk_bytes, chunk_bounds_bulk,
+                              make_int_cache_state)
+from repro.core.hpm import PrefetchOp
+from repro.core.placement import PlacementEngine
+from repro.core.simulator import (DEFAULT_BANDWIDTH_GBPS, GBPS,
+                                  USER_LINK_GBPS, RequestOutcome, SimConfig,
+                                  SimResult)
+from repro.core.trace import ObjectGrid, Request, requests_to_arrays
+
+
+class _LazyOutcomes(collections.abc.Sequence):
+    """List-like over the engine's outcome columns; materializes the
+    :class:`RequestOutcome` tuples on first element access so callers that
+    only read aggregate counters never pay for construction."""
+
+    __slots__ = ("_cols", "_n", "_data")
+
+    def __init__(self, cols: tuple):
+        self._cols = cols
+        self._n = int(cols[0].shape[0])
+        self._data: list | None = None
+
+    def _materialize(self) -> list:
+        if self._data is None:
+            self._data = list(map(RequestOutcome._make,
+                                  zip(*(c.tolist() for c in self._cols))))
+            self._cols = ()
+        return self._data
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, i):
+        return self._materialize()[i]
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+
+class _FastOriginQueue:
+    """Origin task queue with the same float arithmetic and tie-breaking as
+    ``simulator._OriginQueue`` (first free process wins), minus the per-call
+    NumPy dispatch."""
+
+    __slots__ = ("free_at", "overhead")
+
+    def __init__(self, n_procs: int, overhead: float):
+        self.free_at = [0.0] * n_procs
+        self.overhead = overhead
+
+    def submit(self, now: float, duration: float,
+               with_overhead: bool = True) -> tuple[float, float]:
+        fa = self.free_at
+        m = min(fa)
+        i = fa.index(m)
+        start = (now if now > m else m) + (self.overhead if with_overhead else 0.0)
+        end = start + duration
+        fa[i] = end
+        return start, end
+
+
+class VectorVDCSimulator:
+    """Replay a trace through the delivery framework on array-backed state.
+
+    Drop-in for :class:`repro.core.simulator.VDCSimulator` (same constructor,
+    same ``run`` signature and :class:`SimResult` output).  One instance
+    replays one trace (the chunk-address space is sized from the trace).
+    """
+
+    def __init__(self, grid: ObjectGrid, prefetcher, config: SimConfig,
+                 use_cache: bool = True):
+        self.grid = grid
+        self.pf = prefetcher
+        self.cfg = config
+        self.use_cache = use_cache
+        bw = (config.bandwidth_gbps
+              if config.bandwidth_gbps is not None else DEFAULT_BANDWIDTH_GBPS)
+        self.bw = bw * config.bandwidth_scale * GBPS          # bytes/s
+        self.n_dtn = self.bw.shape[0]
+        self.origin = _FastOriginQueue(config.n_service_procs,
+                                       config.origin_latency_s)
+        self.placement = PlacementEngine(grid) if config.enable_placement else None
+        self._chunk_bytes = chunk_bytes(config.stream_rate_bytes_per_s,
+                                        config.chunk_seconds)
+        self._user_dtn: dict[int, int] = {}
+        self._recent_requests: collections.deque[Request] = collections.deque(
+            maxlen=5000)
+        self._last_placement_ts = 0.0
+        self._ulink = USER_LINK_GBPS * GBPS
+        self._bw0 = [float(self.bw[0, d]) for d in range(self.n_dtn)]
+        self._bw_l = self.bw.tolist()
+        # chunk-address space (set up in run())
+        self._off = 0
+        self._span = 1
+        self._n_keys = 0
+        self.caches: dict[int, object] = {}
+        self._present2d: np.ndarray | None = None
+        self._pref2d: np.ndarray | None = None
+        self._pref_issued = 0
+        self._pref_used = 0
+
+    def _origin_dur(self, nbytes: float, dtn: int) -> float:
+        """Origin-link wire time, with the reference's zero-bandwidth
+        semantics (``_transfer_time``: non-positive link → inf)."""
+        b = self._bw0[dtn]
+        return nbytes / b if b > 0.0 else float("inf")
+
+    # -- chunk addressing ----------------------------------------------------
+
+    def _setup_address_space(self, first: np.ndarray, n: np.ndarray) -> None:
+        live = n > 0
+        if live.any():
+            lo = int(first[live].min())
+            hi = int((first[live] + n[live]).max())
+        else:
+            lo, hi = 0, 1
+        self._off = max(0, -lo) + 8
+        self._span = hi + self._off + 8
+        self._alloc_state()
+
+    def _alloc_state(self) -> None:
+        n_keys = self.grid.n_objects * self._span
+        self._n_keys = n_keys
+        self._present2d = np.zeros((self.n_dtn, n_keys), np.bool_)
+        self._present_flat = self._present2d.reshape(-1)
+        self.caches = {
+            d: make_int_cache_state(self.cfg.cache_policy, self.cfg.cache_bytes,
+                                    n_keys, self._present2d[d])
+            for d in range(1, self.n_dtn)
+        }
+        self._pref2d = np.zeros((self.n_dtn, n_keys), np.uint8)
+        # current block's key set, for eviction planning
+        self._blk_mark = np.zeros(n_keys, np.bool_)
+        self._flat_dt = (np.int32 if self.n_dtn * n_keys < 2**31
+                         else np.int64)
+
+    def _grow(self, c_lo: int, c_hi: int) -> None:
+        """Widen the per-object chunk span so [c_lo, c_hi] + old contents fit;
+        re-keys every cache (a pure renaming, so replay state is unchanged)."""
+        off_old, span_old = self._off, self._span
+        off_new = max(off_old, -c_lo + 8)
+        d_off = off_new - off_old
+        span_new = max(span_old + d_off, c_hi + off_new + 8)
+        span_new = span_new + span_new // 4              # headroom
+        n_keys_new = self.grid.n_objects * span_new
+
+        def mapper(keys: np.ndarray) -> np.ndarray:
+            o, rc = np.divmod(keys, span_old)
+            return o * span_new + rc + d_off
+
+        present_new = np.zeros((self.n_dtn, n_keys_new), np.bool_)
+        pref_new = np.zeros((self.n_dtn, n_keys_new), np.uint8)
+        for d, cache in self.caches.items():
+            cache.remap(mapper, n_keys_new, present_new[d])
+            idx = np.nonzero(self._pref2d[d])[0]
+            pref_new[d, mapper(idx)] = self._pref2d[d, idx]
+        self._off, self._span, self._n_keys = off_new, span_new, n_keys_new
+        self._present2d = present_new
+        self._present_flat = present_new.reshape(-1)
+        self._pref2d = pref_new
+        self._blk_mark = np.zeros(n_keys_new, np.bool_)
+        self._flat_dt = (np.int32 if self.n_dtn * n_keys_new < 2**31
+                         else np.int64)
+        # per-request base keys shift too
+        self._base = self._obj_arr * span_new + self._first_arr + off_new
+
+    def _encode_range(self, obj: int, c_first: int, c_last: int) -> np.ndarray:
+        """Dense ids for chunks [c_first, c_last) of obj, growing on demand."""
+        if c_first + self._off < 0 or c_last + self._off > self._span:
+            self._grow(c_first, c_last)
+        base = obj * self._span + self._off
+        return np.arange(base + c_first, base + c_last, dtype=np.int64)
+
+    # -- main entry ----------------------------------------------------------
+
+    def run(self, requests: Sequence[Request], name: str = "") -> SimResult:
+        cfg = self.cfg
+        arr = requests_to_arrays(requests)
+        n_req = len(arr)
+        scale = 1.0 / cfg.traffic_scale
+        now_arr = arr.ts * scale
+        first, n_chunks = chunk_bounds_bulk(
+            arr.tr_start, np.minimum(arr.tr_end, now_arr), cfg.chunk_seconds)
+        # a request with no bytes (or no available chunks) never touches the
+        # cache layer — exclude it from chunk batches entirely
+        zero = (n_chunks == 0) | (arr.size_bytes == 0)
+        k_eff = np.where(zero, 0, n_chunks)
+        per_chunk = np.maximum(1, arr.size_bytes // np.maximum(1, n_chunks))
+        dtn_arr = arr.continent + 1
+        self._obj_arr = arr.obj
+        self._first_arr = first
+        self._setup_address_space(first, k_eff)
+        self._base = arr.obj * self._span + first + self._off
+
+        # fast scalar access for the per-event path
+        self._k_arr = k_eff
+        self._pc_arr = per_chunk
+        self._k_l = k_eff.tolist()
+        self._pc_l = per_chunk.tolist()
+        self._zero_l = zero.tolist()
+        # compact dtypes for the block path (smaller arrays, faster radix)
+        self._base_k = self._base.astype(self._flat_dt)
+        self._req32 = np.arange(n_req, dtype=np.int32)
+        self._dtn32 = dtn_arr.astype(np.int32)
+        self._bwcol = [self.bw[:, d].astype(np.float64)
+                       for d in range(self.n_dtn)]
+
+        # outcome SoA (filled in request-index order by both paths)
+        self._o_lat = np.zeros(n_req, np.float64)
+        self._o_tra = np.zeros(n_req, np.float64)
+        self._o_pt = np.zeros(n_req, np.float64)
+        self._o_loc = np.zeros(n_req, np.int64)
+        self._o_pref = np.zeros(n_req, np.int64)
+        self._o_peer = np.zeros(n_req, np.int64)
+        self._o_org = np.zeros(n_req, np.int64)
+        self._o_bytes = np.where(zero, 0, arr.size_bytes)
+
+        stream_engine = getattr(self.pf, "streaming", None)
+        static = (self.placement is None and stream_engine is None
+                  and getattr(self.pf, "static", False))
+        A = dict(now=now_arr, dtn=dtn_arr, k=k_eff, pc=per_chunk,
+                 zero=zero, arr=arr)
+        if static:
+            self._run_static(A)
+        else:
+            self._run_dynamic(A, stream_engine)
+
+        outcomes = _LazyOutcomes((
+            now_arr, arr.user_id, self._o_bytes, self._o_lat, self._o_tra,
+            self._o_loc, self._o_pref, self._o_peer, self._o_org,
+            self._o_pt))
+        if self.use_cache:
+            stats = {d: c.to_cache_stats() for d, c in self.caches.items()}
+        else:
+            stats = {d: CacheStats() for d in range(1, self.n_dtn)}
+        return SimResult(
+            name=name or self.pf.name,
+            outcomes=outcomes,
+            origin_requests=int((self._o_org > 0).sum()),
+            total_requests=n_req,
+            prefetch_issued_chunks=self._pref_issued,
+            prefetch_used_chunks=self._pref_used,
+            cache_stats=stats,
+            stream_pushes=stream_engine.pushes_emitted if stream_engine else 0,
+        )
+
+    # -- static fast path (no dynamic events) --------------------------------
+
+    def _run_static(self, A: dict) -> None:
+        if not self.use_cache:
+            self._run_static_no_cache(A)
+            return
+        n_req = len(A["arr"])
+        now_a, dtn_a, k_a, pc_a = A["now"], A["dtn"], A["k"], A["pc"]
+        now_l, dtn_l = now_a.tolist(), dtn_a.tolist()
+        lru = all(c.policy == "lru" for c in self.caches.values())
+        if not lru:
+            # LFU keeps a per-touch heap; replay per request (still far
+            # cheaper than the reference's per-chunk dict walk)
+            for idx in range(n_req):
+                self._serve_event(idx, now_l[idx], dtn_l[idx], False, False)
+            return
+        # Block replay.  Invariant that makes whole blocks vectorizable with
+        # misses *included*: in the static path every missed chunk is
+        # inserted into the local DTN cache (peer or origin source), so a
+        # chunk position is a true hit iff it hits the block-start snapshot
+        # OR the same (dtn, chunk) occurred earlier in the block.  Blocks are
+        # truncated so no cache can evict mid-block, keeping the snapshot
+        # monotone.  Only origin-queue submits replay scalarly (their state
+        # is sequential but tiny).
+        n_keys = self._n_keys
+        i, block = 0, 256
+        degenerate = 0
+        while i < n_req:
+            if degenerate >= 4:
+                # cache-thrash regime (working set >> capacity): block
+                # classification keeps getting invalidated by in-block
+                # evictions, so replay a stretch per-request before retrying
+                stop = min(i + 256, n_req)
+                while i < stop:
+                    self._serve_event(i, now_l[i], dtn_l[i], False, False)
+                    i += 1
+                degenerate = 0
+                block = 64
+                continue
+            j = min(i + block, n_req)
+            kb = k_a[i:j]
+            cum = np.cumsum(kb)
+            ktot = int(cum[-1]) if len(cum) else 0
+            if ktot > (1 << 21):
+                # cap block chunk positions (rank encoding + memory)
+                j = i + max(1, int(np.searchsorted(cum, 1 << 21)))
+                kb = kb[:j - i]
+                cum = cum[:j - i]
+                ktot = int(cum[-1])
+            if ktot == 0:
+                i = j
+                block = min(16384, block * 2)
+                continue
+            starts = cum - kb
+            kdt = self._flat_dt
+            req_rep = np.repeat(self._req32[i:j], kb)
+            keys = (np.arange(ktot, dtype=kdt)
+                    + np.repeat(self._base_k[i:j] - starts.astype(kdt), kb))
+            dtns = self._dtn32[req_rep]
+            flat = dtns.astype(kdt, copy=False) * kdt(n_keys) + keys
+            h0 = self._present_flat[flat]
+            # same (dtn, chunk) seen earlier in the block?  One stable radix
+            # argsort groups equal flat ids into runs; the first position of
+            # each run is the first occurrence (commit reuses the same sort
+            # for last occurrences / unique records).
+            order_f = np.argsort(flat, kind="stable")
+            sf = flat[order_f]
+            newrun = np.empty(ktot, np.bool_)
+            newrun[0] = True
+            np.not_equal(sf[1:], sf[:-1], out=newrun[1:])
+            dup = np.ones(ktot, np.bool_)
+            dup[order_f[newrun]] = False
+            true_hit = h0 | dup
+            ins = ~true_hit
+            b = j
+            ev_plans: list[tuple] = []
+            blocked_keys = None
+            if ins.any():
+                # Evictions are allowed mid-block as long as no victim's key
+                # is referenced anywhere in the block (else hit/peer
+                # decisions would change): plan victims per cache against
+                # the block key set, truncating at the first insert that
+                # cannot be satisfied with unreferenced victims.
+                ins_pos = np.nonzero(ins)[0]
+                ins_d = dtns[ins_pos]
+                ins_bytes = pc_a[req_rep[ins_pos]]
+                blocked_keys = keys
+                self._blk_mark[blocked_keys] = True
+                for d, cache in self.caches.items():
+                    dm = ins_d == d
+                    if not dm.any():
+                        continue
+                    d_pos = ins_pos[dm]
+                    cum_ins = np.cumsum(ins_bytes[dm])
+                    room = cache.capacity - cache.used
+                    total = int(cum_ins[-1])
+                    if total <= room:
+                        continue
+                    vk, cumf, ends = cache.plan_evictions(total - room,
+                                                          self._blk_mark)
+                    clean = int(cumf[-1]) if len(cumf) else 0
+                    if clean + room < total:
+                        over = cum_ins > room + clean
+                        p = int(d_pos[int(np.argmax(over))])
+                        b = min(b, int(req_rep[p]))
+                    ev_plans.append((cache, d_pos, cum_ins, room, vk, cumf,
+                                     ends))
+                # an insert larger than its cache is *skipped* by the
+                # reference, breaking the duplicate-hit invariant → blocker
+                cap_min = min(c.capacity for c in self.caches.values())
+                too_big = (pc_a[i:j] > cap_min) & (kb > 0)
+                if too_big.any():
+                    b = min(b, i + int(np.argmax(too_big)))
+            if blocked_keys is not None:
+                self._blk_mark[blocked_keys] = False
+            if b > i:
+                p_end = ktot if b == j else int(starts[b - i])
+                for cache, d_pos, cum_ins, room, vk, cumf, ends in ev_plans:
+                    nin = int(np.searchsorted(d_pos, p_end))
+                    if nin == 0:
+                        continue
+                    need = int(cum_ins[nin - 1]) - room
+                    if need <= 0:
+                        continue
+                    n_ev = int(np.searchsorted(cumf, need)) + 1
+                    cache.apply_evictions(vk, cumf, ends, n_ev)
+                self._block_commit(
+                    i, b, p_end, req_rep, keys, dtns, flat, true_hit,
+                    order_f, newrun, now_l, dtn_l)
+            if b < j:
+                self._serve_event(b, now_l[b], dtn_l[b], False, False)
+                block = min(16384, max(64, 2 * (b - i + 1)))
+                degenerate = degenerate + 1 if b - i < 8 else 0
+                i = b + 1
+            else:
+                block = min(16384, block * 2)
+                degenerate = 0
+                i = j
+
+    def _block_commit(self, i: int, b: int, p_end: int, req_rep, keys, dtns,
+                      flat, true_hit, order_f, newrun, now_l,
+                      dtn_l) -> None:
+        """Retire requests [i, b) — their chunk positions [0, p_end) — in one
+        vectorized pass (hits, peer fetches, origin fetches, cache commit)."""
+        P = p_end
+        ktot = len(keys)
+        if P == 0:
+            return
+        th = true_hit[:P]
+        rel = req_rep[:P] - np.int32(i)
+        R = b - i
+        pc_a = self._pc_arr
+        ins_pos = np.nonzero(~th)[0]
+        m = len(ins_pos)
+        acc = np.zeros(m, np.bool_)
+        src_bw = None
+        ipc = pc_a[req_rep[ins_pos]] if m else None
+        if m and self.cfg.enable_peer_cache:
+            ik = keys[ins_pos]
+            idn = dtns[ins_pos]
+            ireq = req_rep[ins_pos]
+            # peer candidates: presence at request time = block-start
+            # snapshot ∪ chunks first-missed (hence inserted) by an earlier
+            # request of that DTN inside this block
+            cand = self._present2d[:, ik]              # (n_dtn, m) gather
+            iflat = flat[ins_pos]                      # unique per (dtn, key)
+            so = np.argsort(iflat)
+            s_flat = iflat[so]
+            s_req = ireq[so]
+            ar = np.arange(m)
+            # score = link bandwidth if the peer holds the chunk else 0;
+            # argmax picks max-bw peer, lowest DTN id on ties (reference
+            # iterates DTNs ascending keeping strict improvements only)
+            scores = cand * self.bw[:, idn]            # (n_dtn, m)
+            for dd in range(1, self.n_dtn):
+                f2 = dd * self._n_keys + ik
+                loc = np.searchsorted(s_flat, f2)
+                locc = np.minimum(loc, m - 1)
+                found = (loc < m) & (s_flat[locc] == f2)
+                inb = found & (s_req[locc] < ireq)
+                if inb.any():
+                    np.maximum(scores[dd], inb * self.bw[dd, idn],
+                               out=scores[dd])
+            scores[0] = 0.0
+            scores[idn, ar] = 0.0
+            src = np.argmax(scores, axis=0)
+            src_bw = scores[src, ar]
+            acc = src_bw > self.bw[0, idn]
+        # -- per-request outcome aggregation: hits per request = k - misses,
+        # so only the (small) insert set needs a bincount
+        kb_r = np.bincount(rel[ins_pos], minlength=R) if m else \
+            np.zeros(R, np.int64)
+        n_hit_r = self._k_arr[i:b] - kb_r
+        pc_r = self._pc_arr[i:b]
+        local_b_r = n_hit_r * pc_r
+        tra = n_hit_r * (pc_r / self._ulink)
+        accp = ins_pos[acc]
+        stillp = ins_pos[~acc]
+        if len(accp):
+            apc = ipc[acc]
+            peer_t_r = np.bincount(rel[accp], weights=apc / src_bw[acc],
+                                   minlength=R)
+            self._o_peer[i:b] = np.bincount(
+                rel[accp], weights=apc, minlength=R).astype(np.int64)
+            self._o_pt[i:b] = peer_t_r
+            tra = tra + peer_t_r
+        self._o_loc[i:b] = local_b_r
+        if len(stillp):
+            # origin queue state is inherently sequential; replay just these
+            n_still_r = np.bincount(rel[stillp], minlength=R)
+            submit = self.origin.submit
+            origin_dur = self._origin_dur
+            pc_l = self._pc_l
+            rels = np.nonzero(n_still_r)[0]
+            for rrel, ns in zip(rels.tolist(), n_still_r[rels].tolist()):
+                ridx = i + rrel
+                ob = pc_l[ridx] * ns
+                now = now_l[ridx]
+                start, end = submit(now, origin_dur(ob, dtn_l[ridx]))
+                self._o_lat[ridx] = start - now
+                tra[rrel] += end - start
+                self._o_org[ridx] = ob
+        self._o_tra[i:b] = tra
+        # -- cache commit on UNIQUE (dtn, key) records, derived from the
+        # classification sort: each run of equal flat ids yields its first
+        # occurrence (insert decision + insert size) and last occurrence
+        # (final recency).  A key never repeats inside one request, so
+        # "last in reference order (hits, peer inserts, origin inserts per
+        # request)" == "last by position" — ranks encode that order and
+        # double as sparse LRU stamps (order matters, not contiguity).
+        if P == ktot:
+            of, nr = order_f, newrun
+        else:
+            of = order_f[order_f < P]
+            nr = np.empty(P, np.bool_)
+            nr[0] = True
+            sfp = flat[of]
+            np.not_equal(sfp[1:], sfp[:-1], out=nr[1:])
+        first_pos = of[nr]
+        last_mask = np.empty(len(nr), np.bool_)
+        last_mask[-1] = True
+        last_mask[:-1] = nr[1:]
+        last_pos = of[last_mask]
+        u_dtn = dtns[first_pos]                 # (dtn, key)-sorted already
+        u_keys = keys[first_pos]
+        u_ins = ~th[first_pos]
+        u_sz = pc_a[req_rep[first_pos]]
+        # ranks only materialize on the unique subset; a position's phase is
+        # 0 (hit) unless it is a single-occurrence insert
+        u_rank = rel[last_pos].astype(np.int64) * 3
+        if m:
+            ph = np.zeros(P, np.int8)
+            ph[stillp] = 2
+            if len(accp):
+                ph[accp] = 1
+            u_rank += ph[last_pos]
+        u_rank = (u_rank << 22) + last_pos
+        rank_span = (3 * R + 3) << 22
+        # per-DTN lookup stats from per-request totals minus the insert set
+        d_sl = self._dtn32[i:b]
+        k_sl = self._k_arr[i:b]
+        cnt_d = np.bincount(d_sl, weights=k_sl, minlength=self.n_dtn)
+        pcs_d = np.bincount(d_sl, weights=k_sl * pc_a[i:b],
+                            minlength=self.n_dtn)
+        if m:
+            idn_all = dtns[ins_pos]
+            mcnt_d = np.bincount(idn_all, minlength=self.n_dtn)
+            mpcs_d = np.bincount(idn_all, weights=ipc,
+                                 minlength=self.n_dtn)
+        for d, cache in self.caches.items():
+            s0, s1 = np.searchsorted(u_dtn, (d, d + 1))
+            if s1 > s0:
+                sl = slice(int(s0), int(s1))
+                o2 = np.argsort(u_rank[sl])
+                cache.commit_unique(u_keys[sl][o2], u_rank[sl][o2],
+                                    u_ins[sl][o2], u_sz[sl][o2], rank_span)
+            nm_d = int(mcnt_d[d]) if m else 0
+            mb = int(mpcs_d[d]) if m else 0
+            cache.hits += int(cnt_d[d]) - nm_d
+            cache.misses += nm_d
+            cache.hit_bytes += int(pcs_d[d]) - mb
+            cache.miss_bytes += mb
+
+    def _run_static_no_cache(self, A: dict) -> None:
+        submit = self.origin.submit
+        origin_dur = self._origin_dur
+        o_lat, o_tra, o_org = self._o_lat, self._o_tra, self._o_org
+        zero_l = A["zero"].tolist()
+        for idx, (now, d, k, pc) in enumerate(zip(
+                A["now"].tolist(), A["dtn"].tolist(), A["k"].tolist(),
+                A["pc"].tolist())):
+            if zero_l[idx]:
+                continue
+            ob = pc * k
+            start, end = submit(now, origin_dur(ob, d))
+            o_lat[idx] = start - now
+            o_tra[idx] = end - start
+            o_org[idx] = ob
+
+    # -- dynamic path (prefetch / streaming / placement events) --------------
+
+    def _run_dynamic(self, A: dict, stream_engine) -> None:
+        arr = A["arr"]
+        n_req = len(arr)
+        cfg = self.cfg
+        now_l = A["now"].tolist()
+        dtn_l = A["dtn"].tolist()
+        user_l = arr.user_id.tolist()
+        obj_l = arr.obj.tolist()
+        trs_l = arr.tr_start.tolist()
+        tre_l = arr.tr_end.tolist()
+        size_l = arr.size_bytes.tolist()
+        cont_l = arr.continent.tolist()
+        heap: list = []
+        counter = itertools.count(n_req)   # request events own counters 0..n-1
+        pf, placement = self.pf, self.placement
+        user_dtn = self._user_dtn
+        i = 0
+        while i < n_req or heap:
+            if heap and (i >= n_req or heap[0][0] < now_l[i]):
+                t, _, kind, payload = heapq.heappop(heap)
+                if kind == "s":
+                    if stream_engine is not None:
+                        self._apply_push(payload)
+                else:
+                    self._apply_prefetch(payload, t)
+                continue
+            idx = i
+            i += 1
+            now = now_l[idx]
+            dtn = dtn_l[idx]
+            r_scaled = Request(now, user_l[idx], obj_l[idx], trs_l[idx],
+                               tre_l[idx], size_l[idx], cont_l[idx])
+            user_dtn[r_scaled.user_id] = dtn
+            self._recent_requests.append(r_scaled)
+            absorbed = bool(stream_engine and stream_engine.absorb(r_scaled))
+            self._serve_event(idx, now, dtn, absorbed, True)
+            for op in pf.observe(r_scaled):
+                heapq.heappush(heap, (max(now, op.issue_ts), next(counter),
+                                      "p", op))
+            if stream_engine is not None:
+                for push in stream_engine.pushes_until(now):
+                    heapq.heappush(heap, (push.ts, next(counter), "s", push))
+            if (placement is not None
+                    and now - self._last_placement_ts >= cfg.placement_period):
+                self._run_placement(now)
+                self._last_placement_ts = now
+
+    # -- serving -------------------------------------------------------------
+
+    def _serve_event(self, idx: int, now: float, dtn: int, absorbed: bool,
+                     track_pref: bool) -> None:
+        """Reference ``VDCSimulator._serve`` on chunk-id arrays; fills the
+        outcome SoA row for request ``idx``."""
+        if self._zero_l[idx]:
+            return                      # outcome row stays all-zero
+        kk = self._k_l[idx]
+        pc = self._pc_l[idx]
+        lo = int(self._base[idx])
+        hi = lo + kk
+        cache = self.caches[dtn] if self.use_cache else None
+        if cache is not None and kk <= 3 and cache.policy == "lru":
+            # real-time polls and other tiny requests dominate the dynamic
+            # (hpm) event loop; a scalar walk beats array dispatch here
+            self._serve_event_scalar(idx, now, dtn, absorbed, track_pref,
+                                     kk, pc, lo, hi, cache)
+            return
+        local_b = pref_b = peer_b = origin_b = 0
+        transfer = 0.0
+        latency = 0.0
+        peer_t = 0.0
+        miss_keys = None
+        n_miss = kk
+        if cache is not None:
+            seg = self._present2d[dtn, lo:hi]
+            nh = int(seg.sum())
+            if nh:
+                hit_keys = np.nonzero(seg)[0] + lo
+                if track_pref:
+                    prow = self._pref2d[dtn]
+                    consume = hit_keys[prow[hit_keys] == 1]
+                    nc = len(consume)
+                    if nc:
+                        prow[consume] = 2
+                        self._pref_used += nc
+                        pref_b = nc * pc
+                    local_b = (nh - nc) * pc
+                else:
+                    local_b = nh * pc
+                transfer += nh * (pc / self._ulink)
+                cache.touch_hits(hit_keys)
+            cache.record_lookup(nh, kk - nh, pc)
+            n_miss = kk - nh
+            if n_miss:
+                miss_keys = np.nonzero(~seg)[0] + lo
+        # peer lookup for missing chunks (fetch iff the peer link beats the
+        # origin's, same tie-breaking as the reference: lowest DTN id wins)
+        if n_miss and self.cfg.enable_peer_cache and self.use_cache:
+            bwcol = self._bwcol[dtn]
+            cand = self._present2d[:, miss_keys].copy()
+            cand[0] = False
+            cand[dtn] = False
+            scores = np.where(cand, bwcol[:, None], -1.0)
+            src = np.argmax(scores, axis=0)
+            acc = (scores[src, np.arange(n_miss)] > 0.0) & \
+                  (bwcol[src] > bwcol[0])
+            na = int(acc.sum())
+            if na:
+                peer_b = na * pc
+                dts = float((pc / bwcol[src[acc]]).sum())
+                transfer += dts
+                peer_t += dts
+                cache.insert_batch(miss_keys[acc], pc)
+                still_keys = miss_keys[~acc]
+                n_still = n_miss - na
+            else:
+                still_keys = miss_keys
+                n_still = n_miss
+        else:
+            still_keys = miss_keys
+            n_still = n_miss
+        # origin for the rest (absorbed real-time polls skip the queue)
+        if n_still:
+            ob = pc * n_still
+            if absorbed:
+                transfer += ob / self._ulink
+                local_b += ob
+            else:
+                origin_b = ob
+                start, end = self.origin.submit(now, self._origin_dur(ob, dtn))
+                latency = start - now
+                transfer += end - start
+                if cache is not None:
+                    cache.insert_batch(still_keys, pc)
+        self._o_lat[idx] = latency
+        self._o_tra[idx] = transfer
+        self._o_loc[idx] = local_b
+        self._o_pref[idx] = pref_b
+        self._o_peer[idx] = peer_b
+        self._o_org[idx] = origin_b
+        self._o_pt[idx] = peer_t
+
+    def _serve_event_scalar(self, idx: int, now: float, dtn: int,
+                            absorbed: bool, track_pref: bool, kk: int,
+                            pc: int, lo: int, hi: int, cache) -> None:
+        """Scalar mirror of the reference ``_serve`` for tiny chunk counts;
+        float accumulation order matches the reference exactly."""
+        present = cache.present
+        prow = self._pref2d[dtn] if track_pref else None
+        local_b = pref_b = peer_b = origin_b = 0
+        transfer = 0.0
+        latency = 0.0
+        peer_t = 0.0
+        nh = 0
+        missing = None
+        ulink = self._ulink
+        for k in range(lo, hi):
+            if present[k]:
+                nh += 1
+                if track_pref and prow[k] == 1:
+                    prow[k] = 2
+                    self._pref_used += 1
+                    pref_b += pc
+                else:
+                    local_b += pc
+                transfer += pc / ulink
+                cache.touch_one(k)
+            elif missing is None:
+                missing = [k]
+            else:
+                missing.append(k)
+        cache.record_lookup(nh, kk - nh, pc)
+        still = missing
+        if missing and self.cfg.enable_peer_cache:
+            still = None
+            bw_l = self._bw_l
+            row0 = bw_l[0][dtn]
+            p2 = self._present2d
+            for k in missing:
+                best, best_bw = None, 0.0
+                for d in range(1, self.n_dtn):
+                    if d != dtn and p2[d, k] and bw_l[d][dtn] > best_bw:
+                        best, best_bw = d, bw_l[d][dtn]
+                if best is not None and best_bw > row0:
+                    peer_b += pc
+                    dt_ = pc / best_bw
+                    transfer += dt_
+                    peer_t += dt_
+                    cache.insert_one(k, pc)
+                elif still is None:
+                    still = [k]
+                else:
+                    still.append(k)
+        if still:
+            ob = pc * len(still)
+            if absorbed:
+                transfer += ob / ulink
+                local_b += ob
+            else:
+                origin_b = ob
+                start, end = self.origin.submit(now, self._origin_dur(ob, dtn))
+                latency = start - now
+                transfer += end - start
+                for k in still:
+                    cache.insert_one(k, pc)
+        self._o_lat[idx] = latency
+        self._o_tra[idx] = transfer
+        self._o_loc[idx] = local_b
+        self._o_pref[idx] = pref_b
+        self._o_peer[idx] = peer_b
+        self._o_org[idx] = origin_b
+        self._o_pt[idx] = peer_t
+
+    # -- prefetch / push / placement -----------------------------------------
+
+    def _apply_prefetch(self, op: PrefetchOp, now: float) -> None:
+        if not self.use_cache:
+            return
+        dtn = self._user_dtn.get(op.user_id)
+        if dtn is None:
+            return
+        cs = self.cfg.chunk_seconds
+        e = min(op.tr_end, now)
+        if e <= op.tr_start:
+            return
+        c_first = int(math.floor(op.tr_start / cs))
+        c_last = int(math.ceil(e / cs))
+        keys = self._encode_range(op.obj, c_first, c_last)
+        # only finalized chunks ship via pre-fetch (live tail is streaming's)
+        cvec = np.arange(c_first, c_last, dtype=np.int64)
+        keys = keys[(cvec + 1) * cs <= now]
+        if not len(keys):
+            return
+        cache = self.caches[dtn]
+        new_keys = keys[~self._present2d[dtn, keys]]
+        if not len(new_keys):
+            return
+        nbytes = self._chunk_bytes * len(new_keys)
+        self.origin.submit(now, self._origin_dur(nbytes, dtn),
+                           with_overhead=False)
+        cache.insert_batch(new_keys, self._chunk_bytes)
+        self._mark_prefetched(dtn, new_keys)
+
+    def _mark_prefetched(self, dtn: int, keys: np.ndarray) -> None:
+        row = self._pref2d[dtn]
+        fresh = keys[row[keys] == 0]
+        if len(fresh):
+            row[fresh] = 1
+            self._pref_issued += len(fresh)
+
+    def _apply_push(self, push) -> None:
+        if not self.use_cache:
+            return
+        cs = self.cfg.chunk_seconds
+        c_first = int(math.floor(push.tr_start / cs))
+        if push.tr_end > push.tr_start:
+            c_last = int(math.ceil(push.tr_end / cs))
+        else:
+            # sub-chunk push: still mark the covering chunk
+            c_last = int(math.ceil((push.tr_start + cs) / cs))
+        n = c_last - c_first
+        nbytes = int((push.tr_end - push.tr_start)
+                     * self.cfg.stream_rate_bytes_per_s)
+        self.origin.submit(
+            push.ts,
+            self._origin_dur(nbytes, push.dtns[0]) if push.dtns else 0.0,
+            with_overhead=False)
+        size_each = max(1, nbytes // n)
+        if n <= 4 and c_first + self._off >= 0 and \
+                c_last + self._off <= self._span:
+            # pushes cover 1-2 publication intervals: scalar path avoids
+            # ~40us of array dispatch per push (hpm replays millions)
+            base = push.obj * self._span + self._off
+            key_list = list(range(base + c_first, base + c_last))
+            for d in push.dtns:
+                cache = self.caches.get(d)
+                if cache is None:
+                    continue
+                cache.upsert_seq(key_list, size_each)
+                row = self._pref2d[d]
+                for k in key_list:
+                    if row[k] == 0:
+                        row[k] = 1
+                        self._pref_issued += 1
+            return
+        keys = self._encode_range(push.obj, c_first, c_last)
+        for d in push.dtns:
+            if d in self.caches:
+                self.caches[d].upsert_batch(keys, size_each)
+                self._mark_prefetched(d, keys)
+
+    def _find_peer_scalar(self, key: int, dtn: int) -> int | None:
+        best, best_bw = None, 0.0
+        col = self._present2d[:, key]
+        for d in range(1, self.n_dtn):
+            if d == dtn or not col[d]:
+                continue
+            b = self.bw[d, dtn]
+            if b > best_bw:
+                best, best_bw = d, b
+        return best
+
+    def _run_placement(self, now: float) -> None:
+        if not self._recent_requests or not self.use_cache:
+            return
+        util = {d: 1.0 - c.used / max(1, c.capacity)
+                for d, c in self.caches.items()}
+        groups = self.placement.recluster(
+            list(self._recent_requests), self._user_dtn,
+            self.bw / GBPS, util,
+        )
+        cs = self.cfg.chunk_seconds
+        for g in groups:
+            hub = g.hub_dtn
+            if hub not in self.caches:
+                continue
+            cache = self.caches[hub]
+            row = self._present2d[hub]
+            for obj in g.hot_objs:
+                s = max(0.0, now - 24 * 3600.0)
+                if now <= s:
+                    continue
+                c_first = int(math.floor(s / cs))
+                c_last = int(math.ceil(now / cs))
+                c_first = max(c_first, c_last - 4)       # recent[-4:]
+                keys = self._encode_range(int(obj), c_first, c_last)
+                row = self._present2d[hub]                # may move on grow
+                new = keys[~row[keys]]
+                for key in new.tolist():
+                    src = self._find_peer_scalar(key, hub)
+                    if src is None:
+                        self.origin.submit(
+                            now, self._origin_dur(self._chunk_bytes, hub),
+                            with_overhead=False)
+                    cache.insert_batch(np.array([key], np.int64),
+                                       self._chunk_bytes)
+                    self._mark_prefetched(hub, np.array([key], np.int64))

@@ -23,6 +23,7 @@ import collections
 import dataclasses
 import heapq
 import itertools
+import typing
 from typing import Sequence
 
 import numpy as np
@@ -93,8 +94,9 @@ class SimConfig:
         return self
 
 
-@dataclasses.dataclass
-class RequestOutcome:
+class RequestOutcome(typing.NamedTuple):
+    # NamedTuple (not a dataclass): replay engines construct millions of
+    # these per trace, and tuple construction is ~3x cheaper
     ts: float
     user_id: int
     bytes: int
@@ -448,8 +450,19 @@ def run_strategy(
     grid: ObjectGrid,
     config: SimConfig,
     training_requests: Sequence[Request] | None = None,
+    engine: str = "vector",
 ) -> SimResult:
-    """Run one named strategy: no_cache | cache_only | md1 | md2 | hpm."""
+    """Run one named strategy: no_cache | cache_only | md1 | md2 | hpm.
+
+    ``engine`` selects the replay implementation:
+
+    - ``"vector"`` (default): the array-backed batch-replay engine
+      (:mod:`repro.core.engine`) — same results, 1-2 orders of magnitude
+      faster on the serving hot path.
+    - ``"reference"``: the per-chunk dict/heap :class:`VDCSimulator` above —
+      the readable semantic baseline the vector engine is verified against
+      (``tests/test_engine_equivalence.py``).
+    """
     from repro.core.delivery import make_prefetcher
 
     pf = make_prefetcher(strategy, grid, training_requests)
@@ -458,5 +471,12 @@ def run_strategy(
     # but no pre-fetching AND no placement strategy
     if strategy in ("no_cache", "cache_only"):
         config = dataclasses.replace(config, enable_placement=False)
-    sim = VDCSimulator(grid, pf, config, use_cache=use_cache)
+    if engine == "reference":
+        sim = VDCSimulator(grid, pf, config, use_cache=use_cache)
+    elif engine == "vector":
+        from repro.core.engine import VectorVDCSimulator
+
+        sim = VectorVDCSimulator(grid, pf, config, use_cache=use_cache)
+    else:
+        raise ValueError(f"unknown engine: {engine!r}")
     return sim.run(requests, name=strategy)

@@ -50,6 +50,9 @@ class StreamingEngine:
         self.subs: dict[int, _Subscription] = {}     # obj -> subscription
         self.pushes_emitted = 0
         self.requests_absorbed = 0
+        # earliest time any stream could be due; lets the per-request poll in
+        # the simulators return without scanning every subscription
+        self._next_due = float("inf")
 
     def subscribe(self, user_id: int, dtn: int, obj: int, period: float,
                   now: float) -> None:
@@ -60,6 +63,7 @@ class StreamingEngine:
         else:
             sub.period = min(sub.period, period)   # fastest subscriber wins
         sub.subscribers[dtn].add(user_id)
+        self._next_due = min(self._next_due, sub.last_push_end + sub.period)
 
     def unsubscribe(self, user_id: int, obj: int) -> None:
         sub = self.subs.get(obj)
@@ -83,7 +87,12 @@ class StreamingEngine:
     def pushes_until(self, now: float) -> list[StreamPush]:
         """Emit pushes for every stream whose publication interval elapsed.
         One push serves *all* subscribed DTNs (request combining)."""
+        if now < self._next_due:
+            # nothing can be due yet — the common case for every request
+            # event between publication intervals
+            return []
         out: list[StreamPush] = []
+        nxt = float("inf")
         for sub in self.subs.values():
             dtns = tuple(sorted(d for d, u in sub.subscribers.items() if u))
             if not dtns:
@@ -94,4 +103,6 @@ class StreamingEngine:
                 out.append(StreamPush(end, sub.obj, start, end, dtns))
                 sub.last_push_end = end
                 self.pushes_emitted += 1
+            nxt = min(nxt, sub.last_push_end + sub.period)
+        self._next_due = nxt
         return out

@@ -336,6 +336,40 @@ def total_bytes(requests: Iterable[Request]) -> int:
     return sum(r.size_bytes for r in requests)
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestArrays:
+    """Structure-of-arrays view of a trace (one column per Request field).
+
+    The vectorized replay engine consumes traces in this form: chunk ranges,
+    per-chunk sizes and DTN assignment are then computable for the *whole*
+    trace with a handful of NumPy ops instead of per-request Python.
+    """
+
+    ts: np.ndarray            # float64 [n]
+    user_id: np.ndarray       # int64   [n]
+    obj: np.ndarray           # int64   [n]
+    tr_start: np.ndarray      # float64 [n]
+    tr_end: np.ndarray        # float64 [n]
+    size_bytes: np.ndarray    # int64   [n]
+    continent: np.ndarray     # int64   [n]
+
+    def __len__(self) -> int:
+        return int(self.ts.shape[0])
+
+
+def requests_to_arrays(requests: Sequence[Request]) -> RequestArrays:
+    """Transpose a list of :class:`Request` into :class:`RequestArrays`."""
+    return RequestArrays(
+        np.array([r.ts for r in requests], np.float64),
+        np.array([r.user_id for r in requests], np.int64),
+        np.array([r.obj for r in requests], np.int64),
+        np.array([r.tr_start for r in requests], np.float64),
+        np.array([r.tr_end for r in requests], np.float64),
+        np.array([r.size_bytes for r in requests], np.int64),
+        np.array([r.continent for r in requests], np.int64),
+    )
+
+
 def make_trace(name: str, seed: int = 0, scale: float = 1.0) -> list[Request]:
     """Convenience: generate the named observatory trace.
 

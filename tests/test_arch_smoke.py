@@ -12,6 +12,11 @@ from repro.models.transformer import (decode_step, forward, init_params,
 
 ARCHS = list_archs()
 
+# The ≥27B-family reduced configs still cost tens of seconds each on a
+# CPU-only runner; keep tier-1 fast by running them only with -m slow.
+SLOW_ARCHS = {"deepseek-v3-671b", "arctic-480b", "jamba-1.5-large-398b",
+              "gemma3-27b"}
+
 
 def _batch(cfg, key, b=2, s=32):
     if cfg.codebooks > 1:
@@ -26,7 +31,9 @@ def _batch(cfg, key, b=2, s=32):
     return batch
 
 
-@pytest.fixture(scope="module", params=ARCHS)
+@pytest.fixture(scope="module", params=[
+    pytest.param(a, marks=pytest.mark.slow) if a in SLOW_ARCHS else a
+    for a in ARCHS])
 def arch_setup(request):
     arch = request.param
     cfg = get_reduced_config(arch)
@@ -54,9 +61,11 @@ class TestArchSmoke:
                                  batch.get("prefix_embeddings"))
         assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
 
+    @pytest.mark.slow
     def test_train_step_decreases_loss(self, arch_setup):
         """One SGD step on the smoke batch must reduce loss (gradients flow
-        through every layer type)."""
+        through every layer type).  value_and_grad compilation is the single
+        most expensive step per architecture — slow-marked for tier-1."""
         arch, cfg, params, batch = arch_setup
 
         def loss_only(p):

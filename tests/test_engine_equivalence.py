@@ -1,0 +1,124 @@
+"""Reference vs vectorized replay engine equivalence (the contract that lets
+the vectorized engine be the default).
+
+Both engines share the prediction layer (HPM / Markov / mining models,
+streaming engine, placement), so equivalence is about the serving hot path:
+chunk membership, LRU/LFU eviction order, peer selection, origin queueing and
+prefetch bookkeeping.  Integer counters must match *exactly*; float
+aggregates only to summation-order rounding."""
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, make_trace, run_strategy
+from repro.core.trace import GAGE_PROFILE, OOI_PROFILE
+
+PROFILES = {"ooi": OOI_PROFILE, "gage": GAGE_PROFILE}
+
+
+@pytest.fixture(scope="module")
+def splits():
+    out = {}
+    for name in ("ooi", "gage"):
+        tr = make_trace(name, seed=7, scale=0.035)
+        cut = int(len(tr) * 0.3)
+        out[name] = (tr[:cut], tr[cut:])
+    return out
+
+
+def _cfg(trace, test, **kw):
+    kw.setdefault("cache_bytes", 1 << 30)
+    cfg = SimConfig(
+        stream_rate_bytes_per_s=PROFILES[trace].bytes_per_second_stream, **kw)
+    return cfg.calibrate_origin(test)
+
+
+def _int_counters(res):
+    return {
+        "origin_requests": res.origin_requests,
+        "total_requests": res.total_requests,
+        "prefetch_issued": res.prefetch_issued_chunks,
+        "prefetch_used": res.prefetch_used_chunks,
+        "stream_pushes": res.stream_pushes,
+        "cache_stats": {
+            d: (s.hits, s.misses, s.hit_bytes, s.miss_bytes, s.evictions,
+                s.inserted_bytes)
+            for d, s in res.cache_stats.items()
+        },
+        "local_bytes": sum(o.local_bytes for o in res.outcomes),
+        "prefetched_bytes": sum(o.prefetched_bytes for o in res.outcomes),
+        "peer_bytes": sum(o.peer_bytes for o in res.outcomes),
+        "origin_bytes": sum(o.origin_bytes for o in res.outcomes),
+        "bytes": sum(o.bytes for o in res.outcomes),
+    }
+
+
+def _run_both(trace, splits, strategy, **cfg_kw):
+    train, test = splits[trace]
+    ref = run_strategy(strategy, test, PROFILES[trace].grid,
+                       _cfg(trace, test, **cfg_kw), train, engine="reference")
+    vec = run_strategy(strategy, test, PROFILES[trace].grid,
+                       _cfg(trace, test, **cfg_kw), train, engine="vector")
+    return ref, vec
+
+
+def _assert_equivalent(ref, vec):
+    assert _int_counters(ref) == _int_counters(vec)
+    # float aggregates agree to summation-order rounding (nan_ok: a dead
+    # link makes inf - inf appear identically in both engines)
+    assert vec.mean_throughput_mbps == pytest.approx(
+        ref.mean_throughput_mbps, rel=1e-9, nan_ok=True)
+    assert vec.mean_latency_s == pytest.approx(ref.mean_latency_s, rel=1e-9,
+                                               abs=1e-12, nan_ok=True)
+    np.testing.assert_allclose(
+        [o.transfer_time for o in vec.outcomes],
+        [o.transfer_time for o in ref.outcomes], rtol=1e-9, atol=1e-12)
+    np.testing.assert_array_equal(
+        [o.latency for o in vec.outcomes],
+        [o.latency for o in ref.outcomes])
+
+
+@pytest.mark.parametrize("trace", ["ooi", "gage"])
+@pytest.mark.parametrize("strategy", ["no_cache", "cache_only", "hpm"])
+def test_engines_agree(trace, strategy, splits):
+    ref, vec = _run_both(trace, splits, strategy)
+    _assert_equivalent(ref, vec)
+
+
+@pytest.mark.parametrize("trace", ["ooi", "gage"])
+def test_engines_agree_under_eviction_pressure(trace, splits):
+    """A cache far smaller than the working set exercises the vectorized
+    eviction planner (and its sequential-thrash fallback)."""
+    ref, vec = _run_both(trace, splits, "cache_only", cache_bytes=16 << 20)
+    _assert_equivalent(ref, vec)
+
+
+@pytest.mark.parametrize("trace", ["ooi", "gage"])
+def test_engines_agree_lfu(trace, splits):
+    ref, vec = _run_both(trace, splits, "cache_only", cache_policy="lfu",
+                         cache_bytes=64 << 20)
+    _assert_equivalent(ref, vec)
+
+
+def test_engines_agree_fine_chunking(splits):
+    """Finer chunk granularity multiplies per-request chunk counts."""
+    ref, vec = _run_both("ooi", splits, "cache_only", chunk_seconds=600.0)
+    _assert_equivalent(ref, vec)
+
+
+def test_engines_agree_dead_origin_link(splits):
+    """A zero-bandwidth origin link means inf transfer time (reference
+    ``_transfer_time`` semantics), not a crash."""
+    from repro.core.simulator import DEFAULT_BANDWIDTH_GBPS
+
+    bw = DEFAULT_BANDWIDTH_GBPS.copy()
+    bw[0, 2] = 0.0                      # dead server → Asia link
+    ref, vec = _run_both("ooi", splits, "cache_only", bandwidth_gbps=bw)
+    _assert_equivalent(ref, vec)
+    assert any(o.transfer_time == float("inf") for o in vec.outcomes)
+
+
+@pytest.mark.parametrize("trace", ["ooi", "gage"])
+@pytest.mark.parametrize("strategy", ["md1", "md2"])
+def test_engines_agree_md_baselines(trace, strategy, splits):
+    ref, vec = _run_both(trace, splits, strategy)
+    _assert_equivalent(ref, vec)

@@ -1,0 +1,62 @@
+"""GAGE-trace coverage: generator determinism and the paper's qualitative
+ordering (§V-B), previously exercised only for OOI."""
+import pytest
+
+from repro.core import SimConfig, make_trace, run_strategy
+from repro.core.trace import GAGE_PROFILE
+
+
+class TestGageDeterminism:
+    def test_same_seed_same_trace(self):
+        a = make_trace("gage", seed=3, scale=0.03)
+        b = make_trace("gage", seed=3, scale=0.03)
+        assert a == b
+
+    def test_different_seed_different_trace(self):
+        a = make_trace("gage", seed=3, scale=0.03)
+        b = make_trace("gage", seed=4, scale=0.03)
+        assert a != b
+
+    def test_scale_shrinks_users(self):
+        small = make_trace("gage", seed=0, scale=0.03)
+        users = {r.user_id for r in small}
+        assert 0 < len(users) < GAGE_PROFILE.n_users
+
+
+@pytest.fixture(scope="module")
+def gage_results():
+    tr = make_trace("gage", seed=0, scale=0.05)
+    cut = int(len(tr) * 0.3)
+    train, test = tr[:cut], tr[cut:]
+    cfg = SimConfig(
+        stream_rate_bytes_per_s=GAGE_PROFILE.bytes_per_second_stream,
+        cache_bytes=1 << 30,
+    ).calibrate_origin(test)
+    return {
+        s: run_strategy(s, test, GAGE_PROFILE.grid, cfg, train)
+        for s in ("no_cache", "cache_only", "hpm")
+    }
+
+
+class TestGagePaperOrdering:
+    """Figures 9-12 / Table III qualitative claims hold on GAGE too."""
+
+    def test_cache_beats_no_cache_throughput(self, gage_results):
+        assert gage_results["cache_only"].mean_throughput_mbps > \
+            10 * gage_results["no_cache"].mean_throughput_mbps
+
+    def test_hpm_best_throughput(self, gage_results):
+        for other in ("no_cache", "cache_only"):
+            assert gage_results["hpm"].mean_throughput_mbps > \
+                gage_results[other].mean_throughput_mbps
+
+    def test_origin_request_reduction(self, gage_results):
+        assert gage_results["no_cache"].normalized_origin_requests == \
+            pytest.approx(1.0)
+        assert gage_results["cache_only"].normalized_origin_requests < 1.0
+        assert gage_results["hpm"].normalized_origin_requests < \
+            gage_results["cache_only"].normalized_origin_requests
+
+    def test_latency_reduction(self, gage_results):
+        assert gage_results["hpm"].mean_latency_s < \
+            gage_results["no_cache"].mean_latency_s

@@ -9,6 +9,11 @@ import sys
 
 import pytest
 
+# Every test spawns a fresh 8-device-emulation subprocess and recompiles from
+# scratch — ~8 minutes apiece on a CPU runner, so the module is opt-in via
+# `-m slow` and tier-1 stays fast.
+pytestmark = pytest.mark.slow
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -8,7 +8,7 @@ from repro.core.trace import OOI_PROFILE
 
 @pytest.fixture(scope="module")
 def ooi_split():
-    tr = make_trace("ooi", seed=0, scale=0.06)
+    tr = make_trace("ooi", seed=0, scale=0.05)
     split = int(len(tr) * 0.3)
     return tr[:split], tr[split:]
 
