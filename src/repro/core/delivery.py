@@ -14,7 +14,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Protocol, Sequence
 
-from repro.core.hpm import HybridPrefetcher, PrefetchOp, build_rule_transactions
+from repro.core.hpm import (BatchedHPMPlanner, HybridPrefetcher, PrefetchOp,
+                            build_rule_transactions)
 from repro.core.markov import MarkovPredictor
 from repro.core.mining import MeshRulePredictor
 from repro.core.streaming import StreamingEngine
@@ -27,6 +28,17 @@ class Prefetcher(Protocol):
     def observe(self, r: Request) -> list[PrefetchOp]: ...
 
 
+@dataclasses.dataclass(frozen=True)
+class PlannedPrediction:
+    """Whole-trace prediction plan: for request ``i``, the non-stream ops to
+    schedule (``ops[i]``) and the streaming subscriptions to register
+    (``subscriptions[i]``, args of :meth:`StreamingEngine.subscribe`) — the
+    exact side effects ``observe`` would have produced at that request."""
+
+    ops: list[Sequence[PrefetchOp]]
+    subscriptions: list[Sequence[tuple]]
+
+
 class NoPrefetch:
     name = "none"
     # never emits ops nor streams: the vectorized engine may replay whole
@@ -35,6 +47,14 @@ class NoPrefetch:
 
     def observe(self, r: Request) -> list[PrefetchOp]:
         return []
+
+
+def _stream_subscription(r: Request, op: PrefetchOp) -> tuple:
+    """``StreamingEngine.subscribe`` args for a model "stream" op — ONE
+    definition for the online and batch paths (part of the op-for-op
+    equivalence contract)."""
+    return (r.user_id, r.continent + 1, r.obj,
+            max(1.0, op.tr_end - op.tr_start), r.ts)
 
 
 class HPMAdapter:
@@ -57,12 +77,40 @@ class HPMAdapter:
         out = []
         for op in ops:
             if op.reason == "stream":
-                period = max(1.0, op.tr_end - op.tr_start)
-                self.streaming.subscribe(r.user_id, r.continent + 1, r.obj,
-                                         period, r.ts)
+                self.streaming.subscribe(*_stream_subscription(r, op))
             else:
                 out.append(op)
         return out
+
+    def plan(self, requests: Sequence[Request]) -> PlannedPrediction:
+        """Batch mode: pre-compute the whole-trace prediction plan through
+        the two-phase planner (vmapped ARIMA bank, memoized rules).  Emits
+        exactly what per-request :meth:`observe` calls would — ops op-for-op
+        and subscriptions at the same request positions — without mutating
+        the online model's state."""
+        if self.model.users:
+            # the planner replays classification from scratch; planning on
+            # top of observe()-accumulated state would silently diverge
+            raise RuntimeError(
+                "plan() requires an unobserved model: this adapter already "
+                "processed requests via observe()")
+        per_req = BatchedHPMPlanner(self.model).plan(requests)
+        ops: list[Sequence[PrefetchOp]] = []
+        subs: list[Sequence[tuple]] = []
+        empty: tuple = ()
+        for r, req_ops in zip(requests, per_req):
+            if not req_ops:
+                ops.append(empty)
+                subs.append(empty)
+                continue
+            # same per-op routing as observe(): stream ops become
+            # subscriptions, everything else is scheduled as a prefetch
+            r_subs = [_stream_subscription(r, op) for op in req_ops
+                      if op.reason == "stream"]
+            r_ops = [op for op in req_ops if op.reason != "stream"]
+            ops.append(r_ops or empty)
+            subs.append(r_subs or empty)
+        return PlannedPrediction(ops=ops, subscriptions=subs)
 
 
 class MD1Adapter:

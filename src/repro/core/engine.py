@@ -26,8 +26,11 @@ Result equivalence with the reference engine is part of the contract (and
 covered by ``tests/test_engine_equivalence.py``): identical integer counters
 (origin requests, hits/misses/evictions, prefetch issue/use, byte splits)
 and float aggregates equal to within summation-order rounding.  The same
-prefetcher / streaming / placement model objects are used by both engines,
-so the prediction layer cannot diverge.
+prefetcher / streaming / placement model classes are used by both engines;
+prefetchers that support batch planning (hpm) are pre-planned through the
+two-phase planner here (``SimConfig.batched_prediction``), whose op stream
+is bitwise identical to the online ``observe`` loop the reference replays
+(``tests/test_hpm_equivalence.py``).
 """
 from __future__ import annotations
 
@@ -599,9 +602,23 @@ class VectorVDCSimulator:
         tre_l = arr.tr_end.tolist()
         size_l = arr.size_bytes.tolist()
         cont_l = arr.continent.tolist()
+        # batched prediction: prefetchers that expose a planner (hpm) have
+        # their whole op stream pre-computed in two phases — classification
+        # over per-user arrays, then vmapped-ARIMA-bank flush — instead of
+        # per-request observe() calls inside the event loop.  The plan is
+        # op-for-op identical to the online stream (the planner contract).
+        # Only this mode materializes all scaled requests at once; the
+        # online path keeps constructing them per event.
+        plan = None
+        reqs = None
+        plan_fn = getattr(pf := self.pf, "plan", None)
+        if plan_fn is not None and cfg.batched_prediction:
+            reqs = list(map(Request, now_l, user_l, obj_l, trs_l, tre_l,
+                            size_l, cont_l))
+            plan = plan_fn(reqs)
         heap: list = []
         counter = itertools.count(n_req)   # request events own counters 0..n-1
-        pf, placement = self.pf, self.placement
+        placement = self.placement
         user_dtn = self._user_dtn
         i = 0
         while i < n_req or heap:
@@ -617,13 +634,20 @@ class VectorVDCSimulator:
             i += 1
             now = now_l[idx]
             dtn = dtn_l[idx]
-            r_scaled = Request(now, user_l[idx], obj_l[idx], trs_l[idx],
-                               tre_l[idx], size_l[idx], cont_l[idx])
+            r_scaled = (reqs[idx] if reqs is not None else
+                        Request(now, user_l[idx], obj_l[idx], trs_l[idx],
+                                tre_l[idx], size_l[idx], cont_l[idx]))
             user_dtn[r_scaled.user_id] = dtn
             self._recent_requests.append(r_scaled)
             absorbed = bool(stream_engine and stream_engine.absorb(r_scaled))
             self._serve_event(idx, now, dtn, absorbed, True)
-            for op in pf.observe(r_scaled):
+            if plan is None:
+                ops = pf.observe(r_scaled)
+            else:
+                ops = plan.ops[idx]
+                for sub in plan.subscriptions[idx]:
+                    stream_engine.subscribe(*sub)
+            for op in ops:
                 heapq.heappush(heap, (max(now, op.issue_ts), next(counter),
                                       "p", op))
             if stream_engine is not None:

@@ -168,12 +168,16 @@ class RulePredictor:
         self._by_ante: dict[frozenset, list[Rule]] = collections.defaultdict(list)
         for r in self.rules:
             self._by_ante[r.antecedent].append(r)
+        # items that appear in ANY antecedent: candidate combinations outside
+        # this universe cannot match a rule, so predict() skips them
+        self._ante_items = {i for a in self._by_ante for i in a}
 
     def predict(self, recent: Iterable[Item], top_n: int = 3) -> list[Item]:
         recent_set = frozenset(recent)
+        cand = sorted(recent_set & self._ante_items, key=repr)
         scored: dict[Item, float] = {}
-        for sz in range(min(3, len(recent_set)), 0, -1):
-            for ante in itertools.combinations(sorted(recent_set, key=repr), sz):
+        for sz in range(min(3, len(cand)), 0, -1):
+            for ante in itertools.combinations(cand, sz):
                 for rule in self._by_ante.get(frozenset(ante), ()):
                     for item in rule.consequent:
                         if item in recent_set:

@@ -12,17 +12,36 @@ Routes each user's request stream to the appropriate predictor:
   (see :mod:`repro.core.streaming`) — subscribe once, push every new chunk.
 - **human / unclassified**: *association-rule* model — FP-Growth rules
   (support=30, confidence=0.5) predict the next objects; only the top n=3 are
-  pre-fetched; ``ts_{i+1} = ts_i + (ts_i − ts_{i−1})``, ``tr_{i+1} = tr_i``.
+  pre-fetched; ``ts_{i+1} = ts_i + (ts_i − ts_{i−1})``, ``tr_{i+1} = tr_i``,
+  issued at the same ``offset`` fraction of the predicted gap as the history
+  model.
+
+Two execution modes share one semantic definition:
+
+- :class:`HybridPrefetcher` — the *online* model: observe requests one at a
+  time, emit pre-fetch plans immediately.  This is what the reference
+  simulator replays.
+- :class:`BatchedHPMPlanner` — the *two-phase batch* planner used by the
+  vectorized engine: phase one replays the same per-user classification
+  state machine over the user-grouped request arrays (resolving every
+  fast-path and rules prediction as it goes, memoizing repeated rule
+  lookups), phase two flushes all deferred ARIMA work through the vmapped
+  bank (:meth:`repro.core.arima.ARIMA.batched_forecast`) and materializes
+  the remaining ops.  Because prediction depends only on the request
+  stream — never on cache state — the planner emits exactly the op stream
+  ``observe`` would, op for op (pinned by ``tests/test_hpm_equivalence.py``).
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 from typing import Iterable, Sequence
 
 import numpy as np
 
-from repro.core.arima import ARIMA, predict_next_timestamp
+from repro.core.arima import (ARIMA, _gap_stats, clamp_forecast_gap,
+                              predict_next_timestamp)
 from repro.core.classify import REALTIME_PERIOD
 from repro.core.fpgrowth import RulePredictor
 from repro.core.trace import WEEK, Request
@@ -62,6 +81,77 @@ class _UserState:
     cycle_start: float = 0.0
 
 
+def _observe_classification(st: _UserState, r: Request) -> None:
+    """Online classification (paper §IV-A2) — one request into the user's
+    state machine.  Shared verbatim by the online model and the batch
+    planner so their classification decisions cannot diverge."""
+    if not st.timestamps:
+        st.first_ts = r.ts
+        st.cycle_start = r.ts
+    st.timestamps.append(r.ts)
+    if len(st.timestamps) > 200:
+        del st.timestamps[:100]
+    st.objs[r.obj] += 1
+    st.recent_objs.append(r.obj)
+    if len(st.recent_objs) > 16:
+        del st.recent_objs[0]
+    st.last_window = r.tr_end - r.tr_start
+
+    if st.classified in ("program", "realtime"):
+        return
+    # repetition detection: did the user re-request the same object set?
+    st.cycle_objs.add(r.obj)
+    if st.last_cycle_objs and r.obj in st.last_cycle_objs and \
+            st.cycle_objs >= st.last_cycle_objs:
+        st.pattern_repeats += 1
+        st.last_cycle_objs = frozenset(st.cycle_objs)
+        st.cycle_objs = set()
+    elif not st.last_cycle_objs and len(st.timestamps) >= 2 and \
+            r.obj in st.cycle_objs and len(st.cycle_objs) >= 1:
+        st.last_cycle_objs = frozenset(st.cycle_objs)
+        st.cycle_objs = set()
+    if st.pattern_repeats >= REPEAT_THRESHOLD and \
+            (r.ts - st.first_ts) <= LEARNING_PERIOD * 2:
+        gaps = np.diff(np.array(sorted(set(st.timestamps))[-12:]))
+        period = float(np.median(gaps)) if gaps.size else float("inf")
+        st.classified = "realtime" if period <= REALTIME_PERIOD else "program"
+    elif (r.ts - st.first_ts) > LEARNING_PERIOD and st.pattern_repeats == 0:
+        st.classified = "human"
+
+
+def _history_ops(now: float, user_id: int, offset: float, width: float,
+                 objs, next_ts: float) -> list[PrefetchOp]:
+    """Materialize history-model ops: pre-fetch the user's whole repeated
+    object set at the offset point of the predicted gap, window advanced."""
+    issue = now + offset * max(0.0, next_ts - now)
+    return [
+        PrefetchOp(issue, user_id, int(obj), next_ts - width, next_ts,
+                   "history")
+        for obj in sorted(objs)
+    ]
+
+
+def _stream_op(r: Request, st: _UserState) -> PrefetchOp:
+    """Materialize the one-time hand-off of a real-time user to the
+    streaming mechanism: subscribe from the requested range's end, with the
+    user's window as the initial publication period."""
+    return PrefetchOp(r.ts, r.user_id, r.obj, r.tr_end,
+                      r.tr_end + st.last_window, "stream")
+
+
+def _rules_ops(r: Request, offset: float, next_ts: float,
+               preds) -> list[PrefetchOp]:
+    """Materialize association-rule ops (paper §IV-A3): the top predicted
+    objects with ``tr_{i+1} = tr_i`` (identical range to the last request),
+    issued at the offset point of the predicted gap — same issue convention
+    as the history model."""
+    issue = r.ts + offset * max(0.0, next_ts - r.ts)
+    return [
+        PrefetchOp(issue, r.user_id, int(obj), r.tr_start, r.tr_end, "rules")
+        for obj in preds
+    ]
+
+
 class HybridPrefetcher:
     """Online HPM: observe requests one at a time, emit pre-fetch plans."""
 
@@ -83,57 +173,18 @@ class HybridPrefetcher:
         )
         self.realtime_subscriptions: set[tuple[int, int]] = set()  # (user, obj)
 
-    # -- online classification (paper §IV-A2) -------------------------------
-
-    def _update_classification(self, st: _UserState, r: Request) -> None:
-        if not st.timestamps:
-            st.first_ts = r.ts
-            st.cycle_start = r.ts
-        st.timestamps.append(r.ts)
-        if len(st.timestamps) > 200:
-            del st.timestamps[:100]
-        st.objs[r.obj] += 1
-        st.recent_objs.append(r.obj)
-        if len(st.recent_objs) > 16:
-            del st.recent_objs[0]
-        st.last_window = r.tr_end - r.tr_start
-
-        if st.classified in ("program", "realtime"):
-            return
-        # repetition detection: did the user re-request the same object set?
-        st.cycle_objs.add(r.obj)
-        if st.last_cycle_objs and r.obj in st.last_cycle_objs and \
-                st.cycle_objs >= st.last_cycle_objs:
-            st.pattern_repeats += 1
-            st.last_cycle_objs = frozenset(st.cycle_objs)
-            st.cycle_objs = set()
-        elif not st.last_cycle_objs and len(st.timestamps) >= 2 and \
-                r.obj in st.cycle_objs and len(st.cycle_objs) >= 1:
-            st.last_cycle_objs = frozenset(st.cycle_objs)
-            st.cycle_objs = set()
-        if st.pattern_repeats >= REPEAT_THRESHOLD and \
-                (r.ts - st.first_ts) <= LEARNING_PERIOD * 2:
-            gaps = np.diff(np.array(sorted(set(st.timestamps))[-12:]))
-            period = float(np.median(gaps)) if gaps.size else float("inf")
-            st.classified = "realtime" if period <= REALTIME_PERIOD else "program"
-        elif (r.ts - st.first_ts) > LEARNING_PERIOD and st.pattern_repeats == 0:
-            st.classified = "human"
-
     # -- prediction ----------------------------------------------------------
 
     def observe(self, r: Request) -> list[PrefetchOp]:
         """Feed one request; return pre-fetch ops to schedule now."""
         st = self.users[r.user_id]
-        self._update_classification(st, r)
+        _observe_classification(st, r)
         if st.classified == "realtime":
             key = (r.user_id, r.obj)
             if key not in self.realtime_subscriptions:
                 self.realtime_subscriptions.add(key)
                 # streaming engine takes over; no per-request prefetch needed
-                return [
-                    PrefetchOp(r.ts, r.user_id, r.obj, r.tr_end,
-                               r.tr_end + st.last_window, "stream")
-                ]
+                return [_stream_op(r, st)]
             return []
         if st.classified == "program":
             return self._predict_history(st, r)
@@ -146,17 +197,8 @@ class HybridPrefetcher:
         if ts_hist.size < 4:
             return []
         next_ts = predict_next_timestamp(ts_hist, self.arima)
-        issue = r.ts + self.offset * max(0.0, next_ts - r.ts)
-        ops = []
-        width = st.last_window
-        # pre-fetch the user's whole repeated object set, window advanced
-        objs = st.last_cycle_objs or {r.obj}
-        for obj in sorted(objs):
-            ops.append(
-                PrefetchOp(issue, r.user_id, int(obj),
-                           next_ts - width, next_ts, "history")
-            )
-        return ops
+        return _history_ops(r.ts, r.user_id, self.offset, st.last_window,
+                            st.last_cycle_objs or {r.obj}, next_ts)
 
     def _predict_rules(self, st: _UserState, r: Request) -> list[PrefetchOp]:
         if self.rule_predictor is None:
@@ -165,18 +207,135 @@ class HybridPrefetcher:
         if not preds:
             return []
         ts = st.timestamps
+        # paper §IV-A: ts_{i+1} = ts_i + (ts_i − ts_{i−1})
         gap = (ts[-1] - ts[-2]) if len(ts) >= 2 else 300.0
-        next_ts = r.ts + gap
-        # paper: tr_{i+1} = tr_i (identical range to the last request)
-        return [
-            PrefetchOp(r.ts, r.user_id, int(obj), r.tr_start, r.tr_end, "rules")
-            for obj in preds
-        ]
+        return _rules_ops(r, self.offset, r.ts + gap, preds)
 
     # convenience ------------------------------------------------------------
 
     def classification(self, user_id: int) -> str:
         return self.users[user_id].classified if user_id in self.users else "unknown"
+
+
+_NO_OPS: tuple = ()
+_MEMO_MISS = object()
+# rule-prediction memo bound: predictions are pure in the recent-object
+# frozenset, so clearing the cache never changes results — it only re-runs
+# lookups.  Bounds planner memory on human-heavy full-scale traces.
+_RULE_MEMO_MAX = 200_000
+
+
+class BatchedHPMPlanner:
+    """Two-phase batch planner: the whole-trace equivalent of the online
+    ``observe`` loop.
+
+    HPM prediction is a pure function of the request stream (cache state
+    never feeds back into it), so the full per-request op stream can be
+    planned ahead of replay:
+
+    - **phase 1 — classification & fast paths**: requests are grouped by
+      user and each user's sequence is replayed through the shared
+      classification state machine.  A sorted-unique timestamp array and its
+      gap series are maintained *incrementally* (the online path re-sorts
+      per request), near-constant-gap predictions resolve immediately via
+      the shared :func:`repro.core.arima._gap_stats`, rule predictions are
+      memoized on the (frozen) recent-object set, and noisy-gap histories
+      are deferred as ARIMA tasks.
+    - **phase 2 — bank flush**: all deferred gap series go through
+      :meth:`ARIMA.batched_forecast` — ``BANK_WIDTH`` users per compiled
+      vmap call — and the resulting ops are written back to their request
+      slots.
+
+    The emitted stream is bitwise identical to calling ``observe`` per
+    request (fixed-width ARIMA bank + shared helpers; pinned by
+    ``tests/test_hpm_equivalence.py``).
+    """
+
+    def __init__(self, model: HybridPrefetcher):
+        self.model = model
+
+    def plan(self, requests: Sequence[Request]) -> list[Sequence[PrefetchOp]]:
+        """Per-request op lists (``"stream"`` ops included) equal to what
+        ``observe`` would emit, without mutating the online model."""
+        model = self.model
+        offset = model.offset
+        rp = model.rule_predictor
+        out: list[Sequence[PrefetchOp]] = [_NO_OPS] * len(requests)
+
+        by_user: dict[int, list[int]] = {}
+        for i, r in enumerate(requests):
+            by_user.setdefault(r.user_id, []).append(i)
+
+        # (slot, gaps_f32, last_ts, max_gap, req_ts, width, objs)
+        pending: list[tuple] = []
+        rule_memo: dict[frozenset, list] = {}
+        subscribed: set[tuple[int, int]] = set()
+
+        for uid, idxs in by_user.items():
+            st = _UserState()
+            uniq: list[float] = []      # == sorted(set(st.timestamps))
+            gaps: list[float] = []      # == np.diff(uniq)
+            for i in idxs:
+                r = requests[i]
+                prev_len = len(st.timestamps)
+                _observe_classification(st, r)
+                if len(st.timestamps) != prev_len + 1:
+                    # history trim: rebuild the unique view
+                    uniq = sorted(set(st.timestamps))
+                    gaps = [b - a for a, b in zip(uniq, uniq[1:])]
+                elif not uniq or r.ts > uniq[-1]:
+                    if uniq:
+                        gaps.append(r.ts - uniq[-1])
+                    uniq.append(r.ts)
+                elif r.ts < uniq[-1]:
+                    # out-of-order arrival (traces are sorted; kept correct
+                    # for arbitrary input)
+                    j = bisect.bisect_left(uniq, r.ts)
+                    if j >= len(uniq) or uniq[j] != r.ts:
+                        uniq.insert(j, r.ts)
+                        gaps = [b - a for a, b in zip(uniq, uniq[1:])]
+                # else: duplicate of the latest timestamp — no change
+
+                cls = st.classified
+                if cls == "realtime":
+                    key = (uid, r.obj)
+                    if key not in subscribed:
+                        subscribed.add(key)
+                        out[i] = [_stream_op(r, st)]
+                elif cls == "program":
+                    if len(uniq) < 4:
+                        continue
+                    med, max_gap, fast = _gap_stats(gaps)
+                    objs = st.last_cycle_objs or {r.obj}
+                    if fast:
+                        out[i] = _history_ops(r.ts, uid, offset,
+                                              st.last_window, objs,
+                                              uniq[-1] + med)
+                    else:
+                        pending.append(
+                            (i, np.asarray(gaps, np.float32), uniq[-1],
+                             max_gap, r.ts, st.last_window, objs))
+                elif cls == "human" and rp is not None:
+                    key = frozenset(st.recent_objs)
+                    preds = rule_memo.get(key, _MEMO_MISS)
+                    if preds is _MEMO_MISS:
+                        if len(rule_memo) >= _RULE_MEMO_MAX:
+                            rule_memo.clear()
+                        preds = rule_memo[key] = rp.predict(
+                            st.recent_objs, top_n=TOP_N_HUMAN)
+                    if preds:
+                        ts_l = st.timestamps
+                        gap = (ts_l[-1] - ts_l[-2]) if len(ts_l) >= 2 else 300.0
+                        out[i] = _rules_ops(r, offset, r.ts + gap, preds)
+
+        if pending:
+            forecasts = model.arima.batched_forecast([t[1] for t in pending])
+            for (i, _, last, max_gap, r_ts, width, objs), g in zip(
+                    pending, forecasts):
+                next_ts = clamp_forecast_gap(last, float(g), max_gap)
+                out[i] = _history_ops(r_ts, requests[i].user_id, offset,
+                                      width, objs, next_ts)
+        return out
 
 
 def build_rule_transactions(

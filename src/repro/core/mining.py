@@ -34,7 +34,10 @@ class MeshRulePredictor:
         self.min_support = min_support
         self.min_confidence = min_confidence
         self.history = history
-        self.arima = ARIMA(n=history)
+        # md2 predicts online in BOTH engines (no batch planning), so the
+        # fixed-width bank's bitwise contract buys nothing here — use the
+        # single-series program (~BANK_WIDTH x less compute per fit)
+        self.arima = ARIMA(n=history, bank=False)
         self._user_ts: dict[int, list[float]] = collections.defaultdict(list)
         self._user_recent_cells: dict[int, list[int]] = collections.defaultdict(list)
         self._cell_objs: dict[int, collections.Counter] = collections.defaultdict(

@@ -80,6 +80,13 @@ class SimConfig:
     # target utilization at regular traffic.
     origin_latency_s: float = 2.0
     bandwidth_gbps: np.ndarray | None = None
+    # Vector engine only: pre-compute the whole-trace prediction plan through
+    # the prefetcher's batched planner (two-phase HPM: vmapped ARIMA bank +
+    # memoized rules) instead of calling ``observe`` per request.  Emits the
+    # identical op stream (tests/test_hpm_equivalence.py); set False to force
+    # the online path, e.g. for benchmarking the prediction layer itself.
+    # The reference simulator always replays online.
+    batched_prediction: bool = True
 
     def calibrate_origin(self, requests: Sequence["Request"],
                          target_utilization: float = 0.2) -> "SimConfig":
@@ -458,10 +465,14 @@ def run_strategy(
 
     - ``"vector"`` (default): the array-backed batch-replay engine
       (:mod:`repro.core.engine`) — same results, 1-2 orders of magnitude
-      faster on the serving hot path.
+      faster on the serving hot path.  For prefetchers that support it
+      (hpm), prediction runs in batch mode: the whole-trace op stream is
+      planned up front through the vmapped ARIMA bank
+      (``config.batched_prediction``, on by default).
     - ``"reference"``: the per-chunk dict/heap :class:`VDCSimulator` above —
       the readable semantic baseline the vector engine is verified against
-      (``tests/test_engine_equivalence.py``).
+      (``tests/test_engine_equivalence.py``), always predicting online via
+      per-request ``observe``.
     """
     from repro.core.delivery import make_prefetcher
 

@@ -25,9 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.arima import predict_next_timestamp
+from repro.core.arima import ARIMA, predict_next_timestamp
 from repro.models.transformer import (ModelConfig, decode_step, init_params,
                                       prefill)
+
+# per-arrival scheduling is latency-sensitive and outside the replay
+# engines' online==batched equivalence contract: use the single-series
+# compiled program, not the fixed-width bank
+_SCHED_ARIMA = ARIMA(bank=False)
 
 
 @dataclasses.dataclass
@@ -83,7 +88,7 @@ class ServeEngine:
             gaps = np.diff(np.array(h[-8:]))
             med = np.median(gaps)
             if med > 0 and np.std(gaps) / med < 0.25:
-                nxt = predict_next_timestamp(np.array(h[-8:]))
+                nxt = predict_next_timestamp(np.array(h[-8:]), _SCHED_ARIMA)
                 return ts + self.offset * (nxt - ts)
         return None
 
