@@ -19,8 +19,10 @@ def main():
     ap.add_argument("--scale", type=float, default=0.06)
     ap.add_argument("--cache-mb", type=int, default=1024)
     ap.add_argument("--engine", default="vector",
-                    choices=["vector", "reference"],
+                    choices=["vector", "interval", "reference"],
                     help="replay engine (vector = array batch-replay, "
+                         "interval = interval-algebra presence + sharded "
+                         "multi-DTN driver, "
                          "reference = per-chunk dict/heap baseline)")
     args = ap.parse_args()
 

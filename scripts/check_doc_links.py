@@ -1,0 +1,75 @@
+"""Markdown link check for the repo docs (CI `docs` job).
+
+Scans the given markdown files (default: README.md, ROADMAP.md, PAPER.md,
+PAPERS.md, CHANGES.md and docs/*.md) for inline links and validates every
+*relative* target against the working tree (external http(s)/mailto links
+are only syntax-checked — CI must not depend on the network).  Anchors are
+checked against the target file's headings.
+
+Usage:
+    python scripts/check_doc_links.py [files...]
+Exit code 1 and a per-link report on any broken target.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+DEFAULT_FILES = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
+                 "CHANGES.md", "docs/*.md"]
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (good enough for our headings)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    return {slugify(m.group(1))
+            for m in HEADING_RE.finditer(path.read_text(encoding="utf-8"))}
+
+
+def check(files: list[str]) -> int:
+    root = Path(__file__).resolve().parent.parent
+    broken: list[str] = []
+    n_links = 0
+    paths: list[Path] = []
+    for pattern in files:
+        matches = sorted(root.glob(pattern)) if any(c in pattern for c in
+                                                    "*?[") else \
+            [root / pattern]
+        paths.extend(p for p in matches if p.exists())
+    for md in paths:
+        text = md.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            n_links += 1
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            ref, _, anchor = target.partition("#")
+            if ref:
+                dest = (md.parent / ref).resolve()
+                if not dest.exists():
+                    broken.append(f"{md.relative_to(root)}: missing target "
+                                  f"{target!r}")
+                    continue
+            else:
+                dest = md
+            if anchor and dest.suffix == ".md":
+                if slugify(anchor) not in anchors_of(dest):
+                    broken.append(f"{md.relative_to(root)}: missing anchor "
+                                  f"{target!r}")
+    print(f"checked {n_links} links in {len(paths)} files")
+    for b in broken:
+        print(f"BROKEN  {b}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1:] or DEFAULT_FILES))

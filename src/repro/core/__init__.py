@@ -3,16 +3,20 @@
 Public API re-exports.
 """
 from repro.core.arima import ARIMA, ARIMAOrder, predict_next_timestamp
-from repro.core.cache import (IntLFUState, IntLRUState, LFUCache, LRUCache,
-                              chunk_bounds_bulk, chunks_for_range, make_cache,
+from repro.core.cache import (IntervalLRUState, IntLFUState, IntLRUState,
+                              LFUCache, LRUCache, chunk_bounds_bulk,
+                              chunks_for_range, make_cache,
                               make_int_cache_state)
-from repro.core.engine import VectorVDCSimulator
+from repro.core.engine import IntervalVDCSimulator, VectorVDCSimulator
 from repro.core.classify import (classify_request_type, classify_users,
                                  fresh_duplicate_bytes, summarize_trace)
 from repro.core.delivery import (HPMAdapter, MD1Adapter, MD2Adapter,
-                                 NoPrefetch, make_prefetcher)
+                                 NoPrefetch, PeerFetchRange,
+                                 coalesce_peer_fetches, make_prefetcher,
+                                 select_peer_sources)
 from repro.core.fpgrowth import RulePredictor, association_rules, frequent_itemsets
-from repro.core.hpm import HybridPrefetcher, PrefetchOp, build_rule_transactions
+from repro.core.hpm import (BatchedHPMPlanner, HybridPrefetcher, PrefetchOp,
+                            build_rule_transactions)
 from repro.core.kmeans import kmeans
 from repro.core.markov import MarkovPredictor
 from repro.core.mining import MeshRulePredictor
@@ -20,7 +24,7 @@ from repro.core.placement import PlacementEngine, select_hub
 from repro.core.simulator import SimConfig, SimResult, VDCSimulator, run_strategy
 from repro.core.streaming import StreamingEngine
 from repro.core.trace import (GAGE_PROFILE, OOI_PROFILE, ObjectGrid, Request,
-                              RequestArrays, TraceGenerator, make_trace,
-                              requests_to_arrays)
+                              RequestArrays, RequestList, TraceGenerator,
+                              make_trace, requests_to_arrays)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

@@ -217,7 +217,15 @@ class ARIMA:
         return _compiled_bank(n, o.p, o.d, o.q, self.steps, self.lr)
 
     def forecast_next(self, series: np.ndarray) -> float:
-        """Forecast the next value of ``series`` (e.g. inter-arrival gaps)."""
+        """Forecast the next value of ``series`` (e.g. inter-arrival gaps).
+
+        Equivalence obligation: with ``bank=True`` (the default) the scalar
+        call pads a batch through the SAME fixed-width compiled bank
+        program that :meth:`batched_forecast` runs, so online and batched
+        prediction are bitwise identical (``tests/test_hpm_equivalence.py``
+        pins this); ``bank=False`` opts out for latency-sensitive callers
+        outside the equivalence contract.
+        """
         if not self.bank:
             series = np.asarray(series, dtype=np.float32)
             if series.size < 4:

@@ -12,6 +12,7 @@ whole working set; ``benchmarks/fig9_cache_sweep.py`` reproduces this.
 """
 from __future__ import annotations
 
+import bisect
 import collections
 import dataclasses
 import heapq
@@ -662,3 +663,532 @@ def make_int_cache_state(policy: str, capacity_bytes: int, n_keys: int,
     if policy == "lfu":
         return IntLFUState(capacity_bytes, n_keys, present)
     raise ValueError(f"unknown cache policy: {policy}")
+
+
+# ---------------------------------------------------------------------------
+# Interval-algebra cache state (interval engine hot path)
+# ---------------------------------------------------------------------------
+#
+# The array-backed states above still pay O(chunks) per request: presence is
+# a bitmap and LRU recency a per-chunk FIFO, so halving ``chunk_seconds``
+# doubles the serving work.  A request, however, is always ONE contiguous
+# chunk-id range ``[lo, hi)`` (one object, one time range), and the paper's
+# dominant access pattern — overlapping moving windows — keeps each cache's
+# coverage in a handful of contiguous runs.  IntervalLRUState exploits that:
+# presence, per-chunk sizes AND recency live in one sorted list of disjoint
+# ``[start, end)`` segments, so the hit/miss split is an interval
+# intersection, misses are interval subtraction, and eviction planning walks
+# interval *records* — all O(overlapping segments), independent of how many
+# chunks a segment spans.
+#
+# Exact-equivalence scheme (mirrors LRUCache chunk for chunk):
+# - Every touch/insert of a maximal chunk run appends one *record*
+#   ``(rid, lo, hi)`` to a FIFO; rids increase monotonically, and within a
+#   record recency increases with chunk id — exactly the per-chunk stamp
+#   order of the reference (hits are touched in ascending chunk order, then
+#   misses inserted in ascending order).
+# - Each map segment carries the rid of its latest touch.  A record is valid
+#   for exactly the sub-segments that still carry its rid (lazy
+#   invalidation, the same rule as the reference's stale-stamp FIFO).
+# - Eviction pops records oldest-first and evicts their valid segments in
+#   ascending chunk order, splitting a segment when only part of it is
+#   needed — the reference's one-chunk-at-a-time loop, run arithmetically.
+
+
+class IntervalLRUState:
+    """LRU cache state over dense int chunk keys, held as sorted disjoint
+    ``[start, end)`` intervals.  Result-equivalent to :class:`LRUCache` /
+    :class:`IntLRUState`: identical hit/miss/eviction decisions in identical
+    order, verified by ``tests/test_interval_cache.py`` and the engine-level
+    counter contract in ``tests/test_engine_equivalence.py``.
+
+    Two segment maps, both bucketed per data object (a request's chunk
+    range never crosses objects, so every update splices a small
+    per-object list):
+
+    - the *recency map* ``obj -> [starts, ends, rids]`` carries presence
+      and LRU order; every touch coalesces the whole touched range under
+      one fresh record id, so the paper's moving-window pattern keeps it
+      at a handful of segments per object regardless of chunk resolution;
+    - the *size map* ``obj -> [starts, ends, sizes]`` carries per-chunk
+      byte sizes for capacity accounting.  It fragments at request-size
+      boundaries, but is only walked on insert and eviction — never on
+      the hit path.
+
+    LRU order: every touch/insert of a chunk run appends one record
+    ``(rid, obj, lo, hi, src)`` to a FIFO; rids increase monotonically and
+    recency increases with chunk id inside a record — exactly the
+    reference's per-chunk stamp order (hits touched in ascending chunk
+    order, then misses inserted ascending).  A record is valid for the
+    sub-segments that still carry its rid (lazy invalidation); eviction
+    pops records oldest-first and consumes their valid segments in
+    ascending order, splitting segments when only part is needed.
+
+    Used by the interval replay engine's static serving path (one instance
+    per DTN, replayable independently per DTN for the sharded driver).  The
+    ``*_log`` lists record the side effects phase B of that engine needs:
+    miss ranges (peer/origin accounting), insert/evict ranges (presence
+    timelines for peer lookups) and eviction split events (exactness audit
+    for peer-vs-origin insert order — see ``engine.IntervalVDCSimulator``).
+    """
+
+    policy = "lru"
+
+    def __init__(self, capacity_bytes: int, log_events: bool = True):
+        self.capacity = int(capacity_bytes)
+        self.used = 0
+        self.n_live = 0
+        # event logging feeds the sharded driver's phase B (presence
+        # timelines + exactness audit); the sequential sweep resolves peers
+        # inline and turns it off
+        self._log = log_events
+        self._objs: dict[int, list] = {}     # recency map buckets
+        self._sizes: dict[int, list] = {}    # size map buckets
+        # per-object upper bound on covered keys (never lowered by
+        # evictions): lets peer lookups skip objects/live tails this cache
+        # cannot possibly hold without walking its segment lists
+        self.obj_hi: dict[int, int] = {}
+        # live chunk count per record id: lets the eviction scan skip fully
+        # stale FIFO records in O(1) instead of re-walking segment lists
+        self._rid_live: dict[int, int] = {}
+        self._fifo: collections.deque = collections.deque()
+        self._next_rid = 1
+        # counters (CacheStats-compatible)
+        self.hits = 0
+        self.misses = 0
+        self.hit_bytes = 0
+        self.miss_bytes = 0
+        self.evictions = 0
+        self.inserted_bytes = 0
+        # phase-B logs: (req_pos, key_lo, key_hi) int triples
+        self.miss_log: list[tuple[int, int, int]] = []
+        self.insert_log: list[tuple[int, int, int]] = []
+        self.evict_log: list[tuple[int, int, int]] = []
+        # (req_pos, evicted ranges, remaining live ranges of that request's
+        # WHOLE insert group) — one entry per eviction that consumed part
+        # of a request's inserts while other chunks of the same request
+        # survived; ``remaining is None`` marks a mid-insert self-eviction
+        # (always order-sensitive unless the request had no peer chunks)
+        self.split_log: list[tuple[int, list, "list | None"]] = []
+        # insert records per request (log mode only): the audit needs the
+        # whole group because the reference orders *records* peer-first too
+        self._req_records: dict[int, list] = {}
+
+    # -- introspection -------------------------------------------------------
+
+    def intervals(self) -> list[tuple[int, int]]:
+        """Cached coverage as merged sorted disjoint ``[start, end)`` key
+        runs (adjacent segments coalesced regardless of recency)."""
+        out: list[tuple[int, int]] = []
+        for obj in sorted(self._objs):
+            ss, se, _ = self._objs[obj]
+            for s, e in zip(ss, se):
+                if out and out[-1][1] == s:
+                    out[-1] = (out[-1][0], e)
+                else:
+                    out.append((s, e))
+        return out
+
+    def __contains__(self, key: int) -> bool:
+        for ss, se, _ in self._objs.values():
+            i = bisect.bisect_right(ss, key) - 1
+            if i >= 0 and key < se[i]:
+                return True
+        return False
+
+    def to_cache_stats(self) -> CacheStats:
+        return CacheStats(self.hits, self.misses, self.hit_bytes,
+                          self.miss_bytes, self.evictions, self.inserted_bytes)
+
+    def check_invariants(self) -> None:
+        """Test hook: both maps sorted, disjoint, covering the same chunks,
+        and consistent with ``used``/``n_live``."""
+        live = 0
+        for obj, (ss, se, _) in self._objs.items():
+            prev = None
+            for s, e in zip(ss, se):
+                assert s < e, (s, e)
+                if prev is not None:
+                    assert s >= prev, (s, prev)
+                prev = e
+                live += e - s
+        used = zlive = 0
+        for obj, (zs, ze, zz) in self._sizes.items():
+            prev = None
+            for s, e, z in zip(zs, ze, zz):
+                assert s < e, (s, e)
+                if prev is not None:
+                    assert s >= prev, (s, prev)
+                prev = e
+                used += (e - s) * z
+                zlive += e - s
+        assert live == zlive == self.n_live, (live, zlive, self.n_live)
+        assert used == self.used, (used, self.used)
+        by_rid: dict[int, int] = {}
+        for ss, se, sr in self._objs.values():
+            for s, e, r in zip(ss, se, sr):
+                by_rid[r] = by_rid.get(r, 0) + (e - s)
+        assert by_rid == self._rid_live, (by_rid, self._rid_live)
+
+    # -- segment-map plumbing ------------------------------------------------
+
+    @staticmethod
+    def _overlap_start(ss: list, se: list, lo: int) -> int:
+        """Index of the first segment with ``end > lo``."""
+        i = bisect.bisect_right(ss, lo) - 1
+        if i < 0:
+            return 0
+        return i if se[i] > lo else i + 1
+
+    def _splice_r(self, m: list, lo: int, hi: int, mid: "list | None") -> None:
+        """Replace ``[lo, hi)`` of a recency map with ``mid`` (a
+        ``[starts, ends, rids]`` triple, ownership transferred, or None),
+        keeping the left/right remainders of the boundary segments
+        (splitting them when the range cuts into them).  Maintains the
+        per-record live-chunk counts that make stale-record detection O(1)
+        in the eviction scan."""
+        ss, se, sr = m
+        i = self._overlap_start(ss, se, lo)
+        j = i
+        n = len(ss)
+        live = self._rid_live
+        while j < n and ss[j] < hi:
+            a = ss[j] if ss[j] > lo else lo
+            b = se[j] if se[j] < hi else hi
+            r = sr[j]
+            c = live[r] - (b - a)
+            if c:
+                live[r] = c
+            else:
+                del live[r]
+            j += 1
+        if mid is None:
+            new_s, new_e, new_r = [], [], []
+        else:
+            new_s, new_e, new_r = mid
+            for a, b, r in zip(new_s, new_e, new_r):
+                live[r] = live.get(r, 0) + (b - a)
+        if j > i and ss[i] < lo:                       # left remainder
+            new_s.insert(0, ss[i]); new_e.insert(0, lo)
+            new_r.insert(0, sr[i])
+        if j > i and se[j - 1] > hi:                   # right remainder
+            new_s.append(hi); new_e.append(se[j - 1])
+            new_r.append(sr[j - 1])
+        ss[i:j] = new_s; se[i:j] = new_e; sr[i:j] = new_r
+
+    @staticmethod
+    def _splice_z(m: list, lo: int, hi: int, mid: "list | None") -> None:
+        """Replace ``[lo, hi)`` of a size map with ``mid`` (ownership
+        transferred, or None), keeping boundary-segment remainders."""
+        ss, se, sv = m
+        i = IntervalLRUState._overlap_start(ss, se, lo)
+        j = i
+        n = len(ss)
+        while j < n and ss[j] < hi:
+            j += 1
+        new_s, new_e, new_v = mid if mid is not None else ([], [], [])
+        if j > i and ss[i] < lo:
+            new_s.insert(0, ss[i]); new_e.insert(0, lo)
+            new_v.insert(0, sv[i])
+        if j > i and se[j - 1] > hi:
+            new_s.append(hi); new_e.append(se[j - 1])
+            new_v.append(sv[j - 1])
+        ss[i:j] = new_s; se[i:j] = new_e; sv[i:j] = new_v
+
+    def _valid_segs(self, rid: int, obj: int, lo: int,
+                    hi: int) -> list[tuple[int, int]]:
+        """Sub-segments of ``[lo, hi)`` still carrying ``rid`` (the record's
+        live chunks), ascending."""
+        ss, se, sr = self._objs[obj]
+        out = []
+        i = self._overlap_start(ss, se, lo)
+        n = len(ss)
+        while i < n and ss[i] < hi:
+            if sr[i] == rid:
+                out.append((max(ss[i], lo), min(se[i], hi)))
+            i += 1
+        return out
+
+    # -- eviction ------------------------------------------------------------
+
+    def _evict_until(self, size: int, t_now: int) -> None:
+        """Evict chunks in exact LRU order until ``used + size`` fits.
+        Mirrors the reference's one-chunk-at-a-time loop arithmetically:
+        per victim size run, evict ``ceil(shortfall / chunk_size)`` chunks."""
+        fifo = self._fifo
+        live = self._rid_live
+        while self.used + size > self.capacity:
+            rec = fifo.popleft()        # IndexError here would correspond to
+            rid = rec[0]                # the reference's evict-from-empty
+            if rid not in live:
+                continue                # fully stale record: O(1) skip
+            _, obj, lo, hi, src = rec
+            segs = self._valid_segs(rid, obj, lo, hi)
+            evicted: list[tuple[int, int]] = []
+            stopped_at = None
+            zmap = self._sizes[obj]
+            zs, ze, zz = zmap
+            rmap = self._objs[obj]
+            for s, e in segs:
+                # consume this presence run front-to-back, walking the size
+                # runs beneath it (sizes vary at request boundaries)
+                stop = s
+                zi = self._overlap_start(zs, ze, s)
+                while stop < e:
+                    need = self.used + size - self.capacity
+                    if need <= 0:
+                        break
+                    z = zz[zi]
+                    pe = ze[zi] if ze[zi] < e else e
+                    take = min(pe - stop, -(-need // z))
+                    self.used -= take * z
+                    stop += take
+                    zi += 1 if stop == pe else 0
+                if stop > s:
+                    n_ev = stop - s
+                    self.n_live -= n_ev
+                    self.evictions += n_ev
+                    evicted.append((s, stop))
+                    if self._log:
+                        self.evict_log.append((t_now, s, stop))
+                    self._splice_r(rmap, s, stop, None)
+                    self._splice_z(zmap, s, stop, None)
+                if stop < e:
+                    stopped_at = stop
+                    break
+            if stopped_at is not None:
+                # record only partially consumed: re-queue the remainder at
+                # the head (it is still the oldest recency)
+                fifo.appendleft((rid, obj, stopped_at, hi, src))
+            if src >= 0 and evicted and self._log:
+                # part of request ``src``'s inserts was evicted: whether
+                # these exact chunks are the reference's victims depends on
+                # the peer-vs-origin insert order across the request's
+                # WHOLE insert group (the reference queues peer-fetched
+                # records before origin records) — log the event for the
+                # engine's phase-B exactness audit, unless the pop killed
+                # the group's last live chunks (then the evicted *set* is
+                # order-independent)
+                if src == t_now:
+                    # eviction reached the request currently being inserted:
+                    # phase A's live set itself depends on the insert order
+                    self.split_log.append((src, evicted, None))
+                else:
+                    remaining: list = []
+                    if stopped_at is not None:
+                        remaining += self._valid_segs(rid, obj, stopped_at,
+                                                      hi)
+                    for rid2, obj2, lo2, hi2 in self._req_records.get(
+                            src, ()):
+                        if rid2 != rid:
+                            remaining += self._valid_segs(rid2, obj2, lo2,
+                                                          hi2)
+                    if remaining:
+                        self.split_log.append((src, evicted, remaining))
+            if stopped_at is not None:
+                return
+
+    # -- serving -------------------------------------------------------------
+
+    def lookup_touch(self, obj: int, lo: int, hi: int,
+                     size: int) -> tuple[int, tuple]:
+        """Hit/miss split plus LRU touch of the hits for chunk keys
+        ``[lo, hi)`` of ``obj`` — the reference's per-chunk ``lookup`` loop
+        in range form (hits touched in ascending chunk order, one coalesced
+        record per maximal present run).  Returns ``(n_hits, miss_runs)``;
+        the caller decides each miss run's source and inserts via
+        :meth:`insert_runs` (peer-fetched ranges before origin ranges, the
+        reference's order)."""
+        if hi <= lo:
+            return 0, ()
+        m = self._objs.get(obj)
+        if m is None:
+            m = self._objs[obj] = [[], [], []]
+            self._sizes[obj] = [[], [], []]
+        ss, se, sr = m
+        i = self._overlap_start(ss, se, lo)
+        # fast path: full hit inside one segment — the dominant case for
+        # the paper's moving-window traffic (coalescing keeps whole covered
+        # windows in a single segment)
+        if i < len(ss) and ss[i] <= lo and se[i] >= hi:
+            nh = hi - lo
+            self.hits += nh
+            self.hit_bytes += nh * size
+            live = self._rid_live
+            fifo = self._fifo
+            old = sr[i]
+            if ss[i] == lo and se[i] == hi:
+                if fifo and fifo[-1][0] == old and live[old] == nh:
+                    # the segment IS the newest record, fully live:
+                    # re-touching leaves the LRU order bit-identical
+                    return nh, ()
+                rid = self._next_rid
+                self._next_rid = rid + 1
+                fifo.append((rid, obj, lo, hi, -1))
+                c = live[old] - nh
+                if c:
+                    live[old] = c
+                else:
+                    del live[old]
+                live[rid] = nh
+                sr[i] = rid
+                return nh, ()
+            rid = self._next_rid
+            self._next_rid = rid + 1
+            fifo.append((rid, obj, lo, hi, -1))
+            c = live[old] - nh
+            if c:
+                live[old] = c
+            else:
+                del live[old]
+            live[rid] = nh
+            new_s, new_e, new_r = [lo], [hi], [rid]
+            if ss[i] < lo:
+                new_s.insert(0, ss[i]); new_e.insert(0, lo)
+                new_r.insert(0, old)
+            if se[i] > hi:
+                new_s.append(hi); new_e.append(se[i])
+                new_r.append(old)
+            ss[i:i + 1] = new_s; se[i:i + 1] = new_e; sr[i:i + 1] = new_r
+            return nh, ()
+        # walk overlapped segments once: maximal present runs and gaps
+        hit_runs: list[tuple[int, int]] = []
+        miss_runs: list[tuple[int, int]] = []
+        j = i
+        n = len(ss)
+        pos = lo
+        while j < n and ss[j] < hi:
+            a = ss[j] if ss[j] > lo else lo
+            b = se[j] if se[j] < hi else hi
+            if a > pos:
+                miss_runs.append((pos, a))
+            if hit_runs and hit_runs[-1][1] == a:
+                hit_runs[-1] = (hit_runs[-1][0], b)
+            else:
+                hit_runs.append((a, b))
+            pos = b
+            j += 1
+        if pos < hi:
+            miss_runs.append((pos, hi))
+        nh = (hi - lo) - sum(b - a for a, b in miss_runs)
+        nm = (hi - lo) - nh
+        self.hits += nh
+        self.misses += nm
+        self.hit_bytes += nh * size
+        self.miss_bytes += nm * size
+        # touch: one coalesced record per maximal hit run, ascending;
+        # committed in a single splice of [lo, hi) (the miss gaps between
+        # the runs simply stay gaps)
+        if hit_runs:
+            fifo = self._fifo
+            h_s, h_e, h_r = [], [], []
+            for a, b in hit_runs:
+                rid = self._next_rid
+                self._next_rid = rid + 1
+                fifo.append((rid, obj, a, b, -1))
+                h_s.append(a); h_e.append(b); h_r.append(rid)
+            self._splice_r(m, lo, hi, [h_s, h_e, h_r])
+        return nh, miss_runs
+
+    def coverage_runs(self, obj: int, lo: int, hi: int) -> list:
+        """Present sub-runs of ``[lo, hi)`` for ``obj`` (merged, ascending)
+        — the peer-lookup primitive: one interval intersection instead of
+        per-chunk membership tests."""
+        if lo >= self.obj_hi.get(obj, 0):
+            return []
+        m = self._objs.get(obj)
+        if m is None:
+            return []
+        ss, se, _ = m
+        i = self._overlap_start(ss, se, lo)
+        out: list[tuple[int, int]] = []
+        n = len(ss)
+        while i < n and ss[i] < hi:
+            a = ss[i] if ss[i] > lo else lo
+            b = se[i] if se[i] < hi else hi
+            if out and out[-1][1] == a:
+                out[-1] = (out[-1][0], b)
+            else:
+                out.append((a, b))
+            i += 1
+        return out
+
+    def insert_runs(self, obj: int, runs: list, size: int,
+                    req_pos: int) -> None:
+        """Insert absent chunk runs (ascending) with reference ``insert``
+        semantics: oversized chunks are skipped silently, eviction happens
+        chunk by chunk ahead of each insertion, one FIFO record per
+        inserted piece (so recency ascends with chunk id across the runs,
+        exactly the reference's ascending insert loop)."""
+        if not runs or size > self.capacity:
+            return
+        nm = sum(b - a for a, b in runs)
+        oh = self.obj_hi
+        if runs[-1][1] > oh.get(obj, 0):
+            oh[obj] = runs[-1][1]
+        if self.used + nm * size <= self.capacity:
+            fifo = self._fifo
+            m = self._objs[obj]
+            zmap = self._sizes[obj]
+            log = self._log
+            for a, b in runs:
+                rid = self._next_rid
+                self._next_rid = rid + 1
+                fifo.append((rid, obj, a, b, req_pos))
+                if log:
+                    self.insert_log.append((req_pos, a, b))
+                    self._req_records.setdefault(req_pos, []).append(
+                        (rid, obj, a, b))
+                self._splice_r(m, a, b, [[a], [b], [rid]])
+                self._splice_z(zmap, a, b, ([a], [b], [size]))
+            self.used += nm * size
+            self.n_live += nm
+            self.inserted_bytes += nm * size
+            return
+        self._insert_with_evict(obj, runs, size, req_pos)
+
+    def serve(self, req_pos: int, obj: int, lo: int, hi: int,
+              size: int) -> int:
+        """Serve one request assuming every miss is inserted in ascending
+        chunk order (the sharded driver's optimistic phase A — exact unless
+        an eviction later splits one of this request's insert records AND
+        the true peer/origin partition disagrees; the driver audits that).
+        Returns the hit count."""
+        nh, miss_runs = self.lookup_touch(obj, lo, hi, size)
+        if miss_runs:
+            if self._log:
+                ml = self.miss_log
+                for a, b in miss_runs:
+                    ml.append((req_pos, a, b))
+            self.insert_runs(obj, miss_runs, size, req_pos)
+        return nh
+
+    def _insert_with_evict(self, obj: int, miss_runs: list, size: int,
+                           req_pos: int) -> None:
+        """Insert miss runs chunk-group-wise, evicting ahead of each group —
+        the reference's per-chunk evict-then-insert loop in range form.
+        Runs after the hit touches so the request's own hits are already
+        protected by fresh rids."""
+        fifo = self._fifo
+        log = self._log
+        for a, b in miss_runs:
+            j = a
+            while j < b:
+                if self.used + size > self.capacity:
+                    self._evict_until(size, req_pos)
+                cnt = min(b - j, (self.capacity - self.used) // size)
+                rid = self._next_rid
+                self._next_rid = rid + 1
+                self._splice_r(self._objs[obj], j, j + cnt,
+                               [[j], [j + cnt], [rid]])
+                self._splice_z(self._sizes[obj], j, j + cnt,
+                               ([j], [j + cnt], [size]))
+                fifo.append((rid, obj, j, j + cnt, req_pos))
+                if log:
+                    self.insert_log.append((req_pos, j, j + cnt))
+                    self._req_records.setdefault(req_pos, []).append(
+                        (rid, obj, j, j + cnt))
+                self.used += cnt * size
+                self.n_live += cnt
+                self.inserted_bytes += cnt * size
+                j += cnt

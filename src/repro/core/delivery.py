@@ -12,7 +12,10 @@ emits :class:`repro.core.hpm.PrefetchOp` plans.  Adapters:
 from __future__ import annotations
 
 import dataclasses
+import typing
 from typing import Protocol, Sequence
+
+import numpy as np
 
 from repro.core.hpm import (BatchedHPMPlanner, HybridPrefetcher, PrefetchOp,
                             build_rule_transactions)
@@ -159,6 +162,62 @@ class MD2Adapter:
             issue = r.ts + 0.8 * max(0.0, ts - r.ts)
             out.append(PrefetchOp(issue, r.user_id, obj, s, e, "mining"))
         return out
+
+
+# ---------------------------------------------------------------------------
+# Peer-fetch resolution (paper §IV-D) — shared by every replay engine
+# ---------------------------------------------------------------------------
+
+
+def select_peer_sources(bw_to_dtn: np.ndarray, holders: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Resolve peer sources for a batch of missing chunks (paper §IV-D).
+
+    ``bw_to_dtn[s]`` is the link bandwidth from DTN ``s`` into the requesting
+    DTN (``bw_to_dtn[0]`` = the origin link); ``holders[s, c]`` says whether
+    DTN ``s`` holds missing chunk ``c`` at request time.  The caller must
+    already have cleared the origin row and the requesting DTN's own row.
+
+    Returns ``(src, accepted)``: the chosen peer per chunk (max bandwidth,
+    ties to the lowest DTN id — the reference simulator iterates DTNs
+    ascending keeping strict improvements) and whether the fetch is accepted
+    (the peer link strictly beats the origin link; §IV-D resolution order).
+    ``src`` is only meaningful where ``accepted``.
+    """
+    n = holders.shape[1]
+    scores = np.where(holders, bw_to_dtn[:, None], -1.0)
+    src = np.argmax(scores, axis=0)
+    accepted = (scores[src, np.arange(n)] > 0.0) & \
+        (bw_to_dtn[src] > bw_to_dtn[0])
+    return src, accepted
+
+
+class PeerFetchRange(typing.NamedTuple):
+    """One planned peer transfer: chunks ``[key_lo, key_hi)`` shipped from
+    DTN ``src`` into DTN ``dtn`` for the request at trace position
+    ``req_pos`` (dense chunk keys as used by the replay engines)."""
+
+    req_pos: int
+    dtn: int
+    src: int
+    key_lo: int
+    key_hi: int
+
+
+def coalesce_peer_fetches(req_pos: np.ndarray, keys: np.ndarray,
+                          src: np.ndarray, dtn: int) -> list[PeerFetchRange]:
+    """Group accepted per-chunk peer decisions into contiguous
+    :class:`PeerFetchRange` transfers (same request, same source, adjacent
+    chunk keys).  The interval replay engine uses this to expose its phase-B
+    peer plan as ranges instead of chunk lists."""
+    out: list[PeerFetchRange] = []
+    for r, k, s in zip(req_pos.tolist(), keys.tolist(), src.tolist()):
+        if out and out[-1].req_pos == r and out[-1].src == s \
+                and out[-1].key_hi == k:
+            out[-1] = out[-1]._replace(key_hi=k + 1)
+        else:
+            out.append(PeerFetchRange(r, dtn, s, k, k + 1))
+    return out
 
 
 def make_prefetcher(kind: str, grid: ObjectGrid,

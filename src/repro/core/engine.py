@@ -39,12 +39,16 @@ import collections.abc
 import heapq
 import itertools
 import math
+import multiprocessing
+import os
 from typing import Sequence
 
 import numpy as np
 
-from repro.core.cache import (CacheStats, chunk_bytes, chunk_bounds_bulk,
-                              make_int_cache_state)
+from repro.core.cache import (CacheStats, IntervalLRUState, chunk_bytes,
+                              chunk_bounds_bulk, make_int_cache_state)
+from repro.core.delivery import (PeerFetchRange, coalesce_peer_fetches,
+                                 select_peer_sources)
 from repro.core.hpm import PrefetchOp
 from repro.core.placement import PlacementEngine
 from repro.core.simulator import (DEFAULT_BANDWIDTH_GBPS, GBPS,
@@ -82,6 +86,20 @@ class _LazyOutcomes(collections.abc.Sequence):
         return iter(self._materialize())
 
 
+def origin_submit(free_at: list, overhead: float, now: float,
+                  duration: float) -> tuple[float, float]:
+    """One origin-queue submission — THE scalar definition of the queue's
+    float arithmetic and tie-breaking (first free process wins), shared by
+    every replay loop so the cross-engine latency columns stay bit-exact
+    against ``simulator._OriginQueue``.  Mutates ``free_at`` in place."""
+    m = min(free_at)
+    i = free_at.index(m)
+    start = (now if now > m else m) + overhead
+    end = start + duration
+    free_at[i] = end
+    return start, end
+
+
 class _FastOriginQueue:
     """Origin task queue with the same float arithmetic and tie-breaking as
     ``simulator._OriginQueue`` (first free process wins), minus the per-call
@@ -95,13 +113,9 @@ class _FastOriginQueue:
 
     def submit(self, now: float, duration: float,
                with_overhead: bool = True) -> tuple[float, float]:
-        fa = self.free_at
-        m = min(fa)
-        i = fa.index(m)
-        start = (now if now > m else m) + (self.overhead if with_overhead else 0.0)
-        end = start + duration
-        fa[i] = end
-        return start, end
+        return origin_submit(self.free_at,
+                             self.overhead if with_overhead else 0.0,
+                             now, duration)
 
 
 class VectorVDCSimulator:
@@ -237,6 +251,8 @@ class VectorVDCSimulator:
         self._setup_address_space(first, k_eff)
         self._base = arr.obj * self._span + first + self._off
 
+        cap_min0 = min((c.capacity for c in self.caches.values()), default=0)
+        self._pc_may_exceed_cap = bool(per_chunk.max(initial=0) > cap_min0)
         # fast scalar access for the per-event path
         self._k_arr = k_eff
         self._pc_arr = per_chunk
@@ -332,15 +348,15 @@ class VectorVDCSimulator:
             kb = k_a[i:j]
             cum = np.cumsum(kb)
             ktot = int(cum[-1]) if len(cum) else 0
-            if ktot > (1 << 21):
+            if ktot > (1 << 22):
                 # cap block chunk positions (rank encoding + memory)
-                j = i + max(1, int(np.searchsorted(cum, 1 << 21)))
+                j = i + max(1, int(np.searchsorted(cum, 1 << 22)))
                 kb = kb[:j - i]
                 cum = cum[:j - i]
                 ktot = int(cum[-1])
             if ktot == 0:
                 i = j
-                block = min(16384, block * 2)
+                block = min(65536, block * 2)
                 continue
             starts = cum - kb
             kdt = self._flat_dt
@@ -398,10 +414,11 @@ class VectorVDCSimulator:
                                      ends))
                 # an insert larger than its cache is *skipped* by the
                 # reference, breaking the duplicate-hit invariant → blocker
-                cap_min = min(c.capacity for c in self.caches.values())
-                too_big = (pc_a[i:j] > cap_min) & (kb > 0)
-                if too_big.any():
-                    b = min(b, i + int(np.argmax(too_big)))
+                if self._pc_may_exceed_cap:
+                    cap_min = min(c.capacity for c in self.caches.values())
+                    too_big = (pc_a[i:j] > cap_min) & (kb > 0)
+                    if too_big.any():
+                        b = min(b, i + int(np.argmax(too_big)))
             if blocked_keys is not None:
                 self._blk_mark[blocked_keys] = False
             if b > i:
@@ -420,11 +437,11 @@ class VectorVDCSimulator:
                     order_f, newrun, now_l, dtn_l)
             if b < j:
                 self._serve_event(b, now_l[b], dtn_l[b], False, False)
-                block = min(16384, max(64, 2 * (b - i + 1)))
+                block = min(65536, max(64, 2 * (b - i + 1)))
                 degenerate = degenerate + 1 if b - i < 8 else 0
                 i = b + 1
             else:
-                block = min(16384, block * 2)
+                block = min(65536, block * 2)
                 degenerate = 0
                 i = j
 
@@ -498,16 +515,23 @@ class VectorVDCSimulator:
         self._o_loc[i:b] = local_b_r
         if len(stillp):
             # origin queue state is inherently sequential; replay just these
+            # through the shared scalar submit (once per origin-bound
+            # request of the whole trace)
             n_still_r = np.bincount(rel[stillp], minlength=R)
-            submit = self.origin.submit
-            origin_dur = self._origin_dur
+            free = self.origin.free_at
+            ov = self.origin.overhead
+            bw0 = self._bw0
+            inf = float("inf")
             pc_l = self._pc_l
+            submit = origin_submit
             rels = np.nonzero(n_still_r)[0]
             for rrel, ns in zip(rels.tolist(), n_still_r[rels].tolist()):
                 ridx = i + rrel
                 ob = pc_l[ridx] * ns
                 now = now_l[ridx]
-                start, end = submit(now, origin_dur(ob, dtn_l[ridx]))
+                bb = bw0[dtn_l[ridx]]
+                start, end = submit(free, ov, now,
+                                    ob / bb if bb > 0.0 else inf)
                 self._o_lat[ridx] = start - now
                 tra[rrel] += end - start
                 self._o_org[ridx] = ob
@@ -712,10 +736,7 @@ class VectorVDCSimulator:
             cand = self._present2d[:, miss_keys].copy()
             cand[0] = False
             cand[dtn] = False
-            scores = np.where(cand, bwcol[:, None], -1.0)
-            src = np.argmax(scores, axis=0)
-            acc = (scores[src, np.arange(n_miss)] > 0.0) & \
-                  (bwcol[src] > bwcol[0])
+            src, acc = select_peer_sources(bwcol, cand)
             na = int(acc.sum())
             if na:
                 peer_b = na * pc
@@ -947,3 +968,566 @@ class VectorVDCSimulator:
                     cache.insert_batch(np.array([key], np.int64),
                                        self._chunk_bytes)
                     self._mark_prefetched(hub, np.array([key], np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Interval-algebra replay + sharded multi-DTN driver (third engine mode)
+# ---------------------------------------------------------------------------
+#
+# The vector engine above still spends O(total chunk positions) on the
+# serving path.  The interval engine replays static strategies (no dynamic
+# events) on :class:`repro.core.cache.IntervalLRUState` — presence, sizes
+# and LRU recency as sorted disjoint [start, end) chunk-id intervals — in
+# three phases:
+#
+#   A. per-DTN interval sweeps.  In a static replay every missed chunk is
+#      inserted into the local cache regardless of where it was fetched
+#      from, so each DTN's entire cache trajectory (hits, misses, LRU
+#      order, evictions) depends only on its own request subsequence.  The
+#      sweeps are therefore embarrassingly parallel, and the sharded driver
+#      forks worker processes that each replay a subset of the DTNs.
+#   B. peer-fetch resolution.  Phase A logs every cache's presence changes
+#      as (trace position, key range) events; misses are resolved against
+#      the other caches' *presence timelines* (per-chunk [t_in, t_out)
+#      intervals over trace positions) with bulk searchsorted — the only
+#      point where DTNs synchronize, exactly as the paper's §IV-D
+#      resolution order prescribes.
+#   C. origin-queue replay.  Requests with chunks left over after peer
+#      resolution walk the (inherently sequential, but tiny) origin task
+#      queue in trace order — identical float arithmetic to the reference.
+#
+# Exactness audit: the one place where phase separation could diverge from
+# the reference is the LRU insert order *inside* a single request — the
+# reference inserts peer-fetched chunks before origin-fetched ones, phase A
+# assumes ascending chunk order.  That order is only observable when an
+# eviction later consumes part of that request's insert record (a "split
+# event", logged by IntervalLRUState).  Phase B re-checks every split event
+# against the true peer partition; in the (rare) case a split is actually
+# order-sensitive the engine discards the interval replay and falls back to
+# the vector engine, which interleaves peer resolution exactly.  Counter
+# equivalence is therefore unconditional (tests/test_engine_equivalence.py).
+
+
+class _IntervalOrderAmbiguity(Exception):
+    """Raised when a logged eviction split event is sensitive to the
+    peer-vs-origin insert order (phase A's ascending-key assumption is not
+    provably exact) — the caller falls back to the vector engine."""
+
+
+def _ranges_to_chunks(t: np.ndarray, a: np.ndarray, b: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Expand (tag, key_lo, key_hi) ranges into per-chunk (keys, tags)."""
+    cnt = b - a
+    tot = int(cnt.sum())
+    if tot == 0:
+        z = np.empty(0, np.int64)
+        return z, z
+    starts = np.cumsum(cnt) - cnt
+    keys = np.arange(tot, dtype=np.int64) + np.repeat(a - starts, cnt)
+    return keys, np.repeat(t, cnt)
+
+
+class PresenceTimeline:
+    """One DTN cache's presence history as per-chunk ``[t_in, t_out)``
+    intervals over global trace positions, built from phase-A insert/evict
+    range logs and queryable in bulk.
+
+    Queries ask "did this cache hold chunk ``k`` when the (other-DTN)
+    request at trace position ``q`` was served?".  Positions of different
+    DTNs never collide, so strict interval membership ``t_in < q < t_out``
+    needs no tie-breaking; an insert and an evict at the same position
+    (a request whose own later inserts evicted its earlier ones) form an
+    empty interval, correctly invisible to peers.
+    """
+
+    __slots__ = ("_comb", "_kin", "_tout", "_m")
+
+    def __init__(self, ins: np.ndarray, ev: np.ndarray, horizon: int):
+        m = horizon + 1                      # strict upper bound on positions
+        ki, ti = _ranges_to_chunks(ins[:, 0], ins[:, 1], ins[:, 2])
+        ke, te = _ranges_to_chunks(ev[:, 0], ev[:, 1], ev[:, 2])
+        kk = np.concatenate([ki, ke])
+        tt = np.concatenate([ti, te])
+        typ = np.concatenate([np.zeros(len(ki), np.int64),
+                              np.ones(len(ke), np.int64)])
+        order = np.argsort(kk * (2 * m) + tt * 2 + typ)
+        sk, st, sty = kk[order], tt[order], typ[order]
+        ins_mask = sty == 0
+        kin, tin = sk[ins_mask], st[ins_mask]
+        pos = np.nonzero(ins_mask)[0]
+        nxt = np.minimum(pos + 1, max(0, len(sk) - 1))
+        tout = np.full(len(pos), m, np.int64)
+        if len(sk):
+            closed = (pos + 1 < len(sk)) & (sk[nxt] == kin) & (sty[nxt] == 1)
+            tout[closed] = st[nxt[closed]]
+        self._comb = kin * m + tin
+        self._kin = kin
+        self._tout = tout
+        self._m = m
+
+    def query(self, keys: np.ndarray, q: np.ndarray) -> np.ndarray:
+        """Bool mask: chunk ``keys[i]`` present at trace position ``q[i]``."""
+        if not len(self._comb):
+            return np.zeros(len(keys), np.bool_)
+        idx = np.searchsorted(self._comb, keys * self._m + q) - 1
+        idc = np.maximum(idx, 0)
+        return (idx >= 0) & (self._kin[idc] == keys) & (self._tout[idc] > q)
+
+
+def _interval_replay_payload(capacity: int, idx: list, obj: list, lo: list,
+                             kk: list, pc: list) -> dict:
+    """Phase A for one DTN: sweep its request subsequence through an
+    :class:`IntervalLRUState` and package the logs for phase B."""
+    st = IntervalLRUState(capacity)
+    serve = st.serve
+    for i_, o_, l_, k_, p_ in zip(idx, obj, lo, kk, pc):
+        serve(i_, o_, l_, l_ + k_, p_)
+
+    def log3(log: list) -> np.ndarray:
+        flat = np.fromiter(itertools.chain.from_iterable(log), np.int64,
+                           count=3 * len(log))
+        return flat.reshape(-1, 3)
+
+    return dict(
+        counters=(st.hits, st.misses, st.hit_bytes, st.miss_bytes,
+                  st.evictions, st.inserted_bytes),
+        miss=log3(st.miss_log), ins=log3(st.insert_log),
+        ev=log3(st.evict_log), splits=st.split_log,
+    )
+
+
+def _interval_worker_main(conn, capacity: int, jobs: list) -> None:
+    """Forked shard worker: replay a bin of DTNs, ship payloads back."""
+    try:
+        out = {d: _interval_replay_payload(capacity, *job) for d, job in jobs}
+        conn.send((True, out))
+    except BaseException as e:          # surfaced in the driver
+        conn.send((False, repr(e)))
+    finally:
+        conn.close()
+
+
+class IntervalVDCSimulator(VectorVDCSimulator):
+    """Third replay engine: interval-algebra presence tracking plus the
+    sharded multi-DTN replay driver (see the module-section comment above).
+
+    Drop-in for the other engines.  The static LRU serving path goes
+    through a small *replay planner*:
+
+    - in the **fine-chunking regime** (roughly ≥ ``SWEEP_MIN_CHUNKS_PER_REQ``
+      chunk positions per request — sub-five-minute chunks on the paper's
+      traces) it runs the interval machinery, whose per-request cost is
+      governed by *segment* counts, not chunk counts: the sequential global
+      sweep (:meth:`_run_sweep`), or the optimistic sharded driver when
+      ``SimConfig.interval_shards > 1``;
+    - in the coarse regime it inherits the vector engine's block replay,
+      which wins there on bulk NumPy throughput.
+
+    Setting ``interval_shards`` (to any value, including 1) pins the
+    interval machinery regardless of the heuristic.  Strategies with
+    dynamic events (prefetch / streaming / placement), LFU caches and
+    ``use_cache=False`` runs always delegate to the inherited vector
+    paths.  All routes produce identical integer counters
+    (``tests/test_engine_equivalence.py``).
+    """
+
+    #: auto-planner threshold: mean chunk positions per live request above
+    #: which the interval sweep beats block replay (measured crossover on
+    #: the 2-core reference container lies between 55 and 280)
+    SWEEP_MIN_CHUNKS_PER_REQ = 96.0
+
+    #: filled by the last static interval run: accepted peer transfers as
+    #: coalesced (req_pos, dtn, src, key_lo, key_hi) ranges
+    last_peer_fetches: list
+
+    def run(self, requests: Sequence[Request], name: str = "") -> SimResult:
+        self.last_peer_fetches = []
+        stream_engine = getattr(self.pf, "streaming", None)
+        static = (self.placement is None and stream_engine is None
+                  and getattr(self.pf, "static", False))
+        if not (static and self.use_cache
+                and self.cfg.cache_policy.lower() == "lru"):
+            return super().run(requests, name)
+        if self.cfg.interval_shards is None:
+            arr = requests_to_arrays(requests)
+            scale = 1.0 / self.cfg.traffic_scale
+            first, n_chunks = chunk_bounds_bulk(
+                arr.tr_start, np.minimum(arr.tr_end, arr.ts * scale),
+                self.cfg.chunk_seconds)
+            live = (n_chunks > 0) & (arr.size_bytes > 0)
+            n_live = int(live.sum())
+            mean_k = float(n_chunks[live].sum()) / n_live if n_live else 0.0
+            if mean_k < self.SWEEP_MIN_CHUNKS_PER_REQ:
+                return super().run(requests, name)
+        return self._run_static_interval(requests, name)
+
+    # -- phase A -------------------------------------------------------------
+
+    def _resolve_workers(self, n_jobs: int) -> int:
+        # Default: the sequential global sweep.  Its inline peer resolution
+        # is unconditionally exact, and on skewed traces (OOI routes ~68%
+        # of requests to one DTN) per-DTN sharding cannot amortize its fork
+        # and result-shipping overhead on a small host.  Explicit
+        # ``interval_shards > 1`` opts into the optimistic sharded driver,
+        # which shines on balanced traces / many-core machines.
+        w = self.cfg.interval_shards
+        if w is None:
+            return 1
+        return max(1, min(int(w), n_jobs, (os.cpu_count() or 1)))
+
+    def _phase_a(self, dtn_arr: np.ndarray, zero: np.ndarray,
+                 obj_arr: np.ndarray, base: np.ndarray, k_eff: np.ndarray,
+                 per_chunk: np.ndarray) -> dict[int, dict]:
+        live = ~zero
+        jobs: dict[int, tuple] = {}
+        loads: list[tuple[int, int]] = []
+        for d in range(1, self.n_dtn):
+            sel = np.nonzero(live & (dtn_arr == d))[0]
+            if len(sel):
+                jobs[d] = (sel.tolist(), obj_arr[sel].tolist(),
+                           base[sel].tolist(), k_eff[sel].tolist(),
+                           per_chunk[sel].tolist())
+                loads.append((len(sel), d))
+        cap = self.cfg.cache_bytes
+        n_workers = self._resolve_workers(len(jobs))
+        if n_workers <= 1:
+            return {d: _interval_replay_payload(cap, *jobs[d]) for d in jobs}
+        # greedy bin-packing by request count; the driver replays the
+        # heaviest bin itself while forked workers handle the rest
+        loads.sort(reverse=True)
+        bins: list[list[int]] = [[] for _ in range(n_workers)]
+        totals = [0] * n_workers
+        for load, d in loads:
+            i = totals.index(min(totals))
+            bins[i].append(d)
+            totals[i] += load
+        bins = [b for b in bins if b]
+        bins.sort(key=lambda b: -sum(len(jobs[d][0]) for d in b))
+        try:
+            ctx = multiprocessing.get_context("fork")
+        except ValueError:                       # no fork on this platform
+            return {d: _interval_replay_payload(cap, *jobs[d]) for d in jobs}
+        procs = []
+        for b in bins[1:]:
+            parent_conn, child_conn = ctx.Pipe(duplex=False)
+            p = ctx.Process(target=_interval_worker_main,
+                            args=(child_conn, cap, [(d, jobs[d]) for d in b]),
+                            daemon=True)
+            p.start()
+            child_conn.close()
+            procs.append((p, parent_conn))
+        payloads = {d: _interval_replay_payload(cap, *jobs[d])
+                    for d in bins[0]}
+        for p, conn in procs:
+            ok, out = conn.recv()
+            conn.close()
+            p.join()
+            if not ok:
+                raise RuntimeError(f"interval shard worker failed: {out}")
+            payloads.update(out)
+        return payloads
+
+    # -- dispatcher ----------------------------------------------------------
+
+    def _run_static_interval(self, requests: Sequence[Request],
+                             name: str) -> SimResult:
+        cfg = self.cfg
+        arr = requests_to_arrays(requests)
+        n_req = len(arr)
+        scale = 1.0 / cfg.traffic_scale
+        now_arr = arr.ts * scale
+        first, n_chunks = chunk_bounds_bulk(
+            arr.tr_start, np.minimum(arr.tr_end, now_arr), cfg.chunk_seconds)
+        zero = (n_chunks == 0) | (arr.size_bytes == 0)
+        k_eff = np.where(zero, 0, n_chunks)
+        per_chunk = np.maximum(1, arr.size_bytes // np.maximum(1, n_chunks))
+        dtn_arr = arr.continent + 1
+        live = k_eff > 0
+        if live.any():
+            lo_min = int(first[live].min())
+            hi_max = int((first + k_eff)[live].max())
+        else:
+            lo_min, hi_max = 0, 1
+        off = max(0, -lo_min) + 8
+        span = hi_max + off + 8
+        P = dict(arr=arr, n_req=n_req, now=now_arr, zero=zero, k_eff=k_eff,
+                 pc=per_chunk, dtn=dtn_arr, obj=arr.obj,
+                 base=arr.obj * span + first + off)
+        out = None
+        if self._resolve_workers(int(np.unique(dtn_arr[~zero]).size
+                                     or 1)) > 1:
+            try:
+                out = self._run_sharded(P)
+            except _IntervalOrderAmbiguity:
+                # a logged eviction split was sensitive to the true peer-vs-
+                # origin insert order: discard the optimistic replay and run
+                # the exact sequential sweep
+                out = None
+        if out is None:
+            out = self._run_sweep(P)
+        return self._finish(P, out, name)
+
+    # -- sequential global sweep (inline peer resolution; always exact) ------
+
+    def _run_sweep(self, P: dict) -> dict:
+        """Replay the whole trace in order, one DTN cache state per DTN:
+        hit/miss split and LRU touch by interval intersection, peer fetch
+        ranges resolved *inline* against the other caches' current coverage
+        (so the reference's peer-before-origin insert order is applied
+        exactly, with no audit needed), origin-queue submits deferred to a
+        trace-order replay after the sweep."""
+        cfg = self.cfg
+        n_req = P["n_req"]
+        live = np.nonzero(~P["zero"])[0]
+        idx_l = live.tolist()
+        dtn_l = P["dtn"][live].tolist()
+        obj_l = P["obj"][live].tolist()
+        lo_l = P["base"][live].tolist()
+        k_l = P["k_eff"][live].tolist()
+        pc_l = P["pc"][live].tolist()
+        cap = cfg.cache_bytes
+        states = {d: IntervalLRUState(cap, log_events=False)
+                  for d in range(1, self.n_dtn)}
+        bw = self.bw
+        # peer candidates per DTN, best-first: sorted by (-bw, id) a greedy
+        # first-holder assignment equals the reference's max-bw/lowest-id
+        # rule; peers that cannot beat the origin link are pruned outright
+        cands: dict[int, list] = {}
+        for d in range(1, self.n_dtn):
+            ob = float(bw[0, d])
+            cl = [(float(bw[d2, d]), d2) for d2 in range(1, self.n_dtn)
+                  if d2 != d and float(bw[d2, d]) > ob
+                  and float(bw[d2, d]) > 0.0]
+            cl.sort(key=lambda t: (-t[0], t[1]))
+            cands[d] = cl
+        enable_peer = cfg.enable_peer_cache
+        nh_l: list[int] = []
+        miss_pos: list[int] = []
+        miss_acc: list[int] = []
+        miss_pdt: list[float] = []
+        miss_still: list[int] = []
+        org_pos: list[int] = []
+        org_n: list[int] = []
+        peer_ranges: list[tuple] = []
+        for pos, (d, o, lo, kk, pc) in enumerate(
+                zip(dtn_l, obj_l, lo_l, k_l, pc_l)):
+            st = states[d]
+            nh, miss = st.lookup_touch(o, lo, lo + kk, pc)
+            nh_l.append(nh)
+            if not miss:
+                continue
+            ridx = idx_l[pos]
+            n_acc = 0
+            peer_dt = 0.0
+            if enable_peer:
+                unassigned = miss
+                acc_runs: list[tuple[int, int]] = []
+                for bwv, d2 in cands[d]:
+                    if not unassigned:
+                        break
+                    cov_of = states[d2].coverage_runs
+                    rem: list[tuple[int, int]] = []
+                    for a, b in unassigned:
+                        p2 = a
+                        for s, e in cov_of(o, a, b):
+                            if s > p2:
+                                rem.append((p2, s))
+                            acc_runs.append((s, e))
+                            n_acc += e - s
+                            peer_dt += (e - s) * (pc / bwv)
+                            peer_ranges.append(
+                                PeerFetchRange(ridx, d, d2, s, e))
+                            p2 = e
+                        if p2 < b:
+                            rem.append((p2, b))
+                    unassigned = rem
+                if acc_runs:
+                    acc_runs.sort()
+                    st.insert_runs(o, acc_runs, pc, ridx)
+                still = unassigned
+            else:
+                still = miss
+            n_still = 0
+            if still:
+                n_still = sum(b - a for a, b in still)
+                st.insert_runs(o, still, pc, ridx)
+                org_pos.append(pos)
+                org_n.append(n_still)
+            miss_pos.append(pos)
+            miss_acc.append(n_acc)
+            miss_pdt.append(peer_dt)
+            miss_still.append(n_still)
+        per_chunk = P["pc"]
+        nh_full = np.zeros(n_req, np.int64)
+        nh_full[live] = nh_l
+        o_peer = np.zeros(n_req, np.int64)
+        o_pt = np.zeros(n_req, np.float64)
+        tra = nh_full * (per_chunk / self._ulink)
+        n_still_arr = np.zeros(n_req, np.int64)
+        if miss_pos:
+            midx = live[miss_pos]
+            o_peer[midx] = np.asarray(miss_acc, np.int64) * per_chunk[midx]
+            o_pt[midx] = miss_pdt
+            tra[midx] += miss_pdt
+            n_still_arr[midx] = miss_still
+        stats = {d: st.to_cache_stats() for d, st in states.items()}
+        self.caches = states
+        return dict(nh=nh_full, tra=tra, o_peer=o_peer, o_pt=o_pt,
+                    n_still=n_still_arr, stats=stats,
+                    peer_ranges=peer_ranges)
+
+    # -- sharded driver (optimistic per-DTN phase A + audited phase B) -------
+
+    def _run_sharded(self, P: dict) -> dict:
+        """Phases A (parallel per-DTN sweeps) and B (timeline-based peer
+        resolution + exactness audit); raises
+        :class:`_IntervalOrderAmbiguity` when an eviction split event is
+        order-sensitive."""
+        n_req = P["n_req"]
+        payloads = self._phase_a(P["dtn"], P["zero"], P["obj"], P["base"],
+                                 P["k_eff"], P["pc"])
+        # the per-DTN cache states live (and die) in the shard workers;
+        # only their logs/counters come back — drop any stale state a
+        # previous run left on this simulator
+        self.caches = {}
+        per_chunk = P["pc"]
+        o_pt = np.zeros(n_req, np.float64)
+        o_peer = np.zeros(n_req, np.int64)
+        n_still = np.zeros(n_req, np.int64)
+        nh_arr = P["k_eff"].copy()
+        tra = np.zeros(n_req, np.float64)
+        timelines: dict[int, PresenceTimeline] = {}
+
+        def timeline(d: int) -> PresenceTimeline:
+            tl = timelines.get(d)
+            if tl is None:
+                pay = payloads.get(d)
+                e = np.empty((0, 3), np.int64)
+                tl = PresenceTimeline(pay["ins"] if pay else e,
+                                      pay["ev"] if pay else e, n_req)
+                timelines[d] = tl
+            return tl
+
+        bw = self.bw
+        split_checks: list[tuple] = []
+        peer_ranges: list = []
+        for d, pay in sorted(payloads.items()):
+            miss = pay["miss"]
+            if not len(miss):
+                continue
+            keys, req_rep = _ranges_to_chunks(miss[:, 0], miss[:, 1],
+                                              miss[:, 2])
+            nm = len(keys)
+            best_bw = np.zeros(nm, np.float64)
+            src = np.zeros(nm, np.int64)
+            origin_bw = float(bw[0, d])
+            if self.cfg.enable_peer_cache:
+                for d2 in range(1, self.n_dtn):
+                    b2 = float(bw[d2, d])
+                    if d2 == d or b2 <= origin_bw or b2 <= 0.0:
+                        continue               # can never win acceptance
+                    held = timeline(d2).query(keys, req_rep)
+                    upd = held & (b2 > best_bw)
+                    if upd.any():
+                        best_bw[upd] = b2
+                        src[upd] = d2
+            acc = best_bw > origin_bw
+            n_miss_req = np.bincount(req_rep, minlength=n_req)
+            nh_arr -= n_miss_req
+            n_acc = np.bincount(req_rep[acc], minlength=n_req)
+            if acc.any():
+                pcs = per_chunk[req_rep[acc]]
+                dt = np.bincount(req_rep[acc], weights=pcs / best_bw[acc],
+                                 minlength=n_req)
+                o_peer += n_acc * per_chunk
+                o_pt += dt
+                tra += dt
+                peer_ranges.extend(coalesce_peer_fetches(
+                    req_rep[acc], keys[acc], src[acc], d))
+            n_still += n_miss_req - n_acc
+            # miss logs are appended in trace order, so req_rep is sorted:
+            # slice out each split request's accepted chunks by bisection
+            for s_req, evicted, remaining in pay["splits"]:
+                a_, b_ = np.searchsorted(req_rep, (s_req, s_req + 1))
+                sl = slice(int(a_), int(b_))
+                split_checks.append((evicted, remaining,
+                                     set(keys[sl][acc[sl]].tolist())))
+
+        # exactness audit: every eviction that consumed part of a request's
+        # insert group must be insensitive to the true peer-vs-origin
+        # insert order (the reference evicts the peer-fetched chunks of a
+        # request before its origin chunks — across ALL its records)
+        for evicted, remaining, accset in split_checks:
+            if remaining is None:
+                # mid-insert self-eviction: phase A's own trajectory depends
+                # on the order unless the request had no peer chunks at all
+                if accset:
+                    raise _IntervalOrderAmbiguity
+                continue
+            e_keys = [k for a, b in evicted for k in range(a, b)]
+            r_keys = [k for a, b in remaining for k in range(a, b)]
+            true_order = sorted(
+                e_keys + r_keys,
+                key=lambda k: (1 if k in accset else 2, k))
+            if set(true_order[:len(e_keys)]) != set(e_keys):
+                raise _IntervalOrderAmbiguity
+
+        tra += nh_arr * (per_chunk / self._ulink)
+        stats = {}
+        for d in range(1, self.n_dtn):
+            pay = payloads.get(d)
+            stats[d] = CacheStats(*pay["counters"]) if pay else CacheStats()
+        return dict(nh=nh_arr, tra=tra, o_peer=o_peer, o_pt=o_pt,
+                    n_still=n_still, stats=stats, peer_ranges=peer_ranges)
+
+    # -- phase C + result assembly -------------------------------------------
+
+    def _finish(self, P: dict, out: dict, name: str) -> SimResult:
+        """Sequential origin-queue replay in trace order (identical float
+        arithmetic to the reference) and :class:`SimResult` assembly."""
+        cfg = self.cfg
+        n_req = P["n_req"]
+        now_arr = P["now"]
+        per_chunk = P["pc"]
+        dtn_arr = P["dtn"]
+        n_still = out["n_still"]
+        tra = out["tra"]
+        o_lat = np.zeros(n_req, np.float64)
+        o_org = np.zeros(n_req, np.int64)
+        nz = np.nonzero(n_still)[0]
+        if len(nz):
+            free = [0.0] * cfg.n_service_procs
+            ov = cfg.origin_latency_s
+            bw0 = self._bw0
+            inf = float("inf")
+            submit = origin_submit
+            lat_l: list[float] = []
+            dtr_l: list[float] = []
+            ob_l = (per_chunk[nz] * n_still[nz]).tolist()
+            for now, d, ob in zip(now_arr[nz].tolist(),
+                                  dtn_arr[nz].tolist(), ob_l):
+                b = bw0[d]
+                start, end = submit(free, ov, now,
+                                    ob / b if b > 0.0 else inf)
+                lat_l.append(start - now)
+                dtr_l.append(end - start)
+            o_lat[nz] = lat_l
+            tra[nz] += dtr_l
+            o_org[nz] = per_chunk[nz] * n_still[nz]
+        self.last_peer_fetches = out["peer_ranges"]
+        o_loc = out["nh"] * per_chunk
+        arr = P["arr"]
+        o_bytes = np.where(P["zero"], 0, arr.size_bytes)
+        outcomes = _LazyOutcomes((
+            now_arr, arr.user_id, o_bytes, o_lat, tra, o_loc,
+            np.zeros(n_req, np.int64), out["o_peer"], o_org, out["o_pt"]))
+        return SimResult(
+            name=name or self.pf.name,
+            outcomes=outcomes,
+            origin_requests=int((o_org > 0).sum()),
+            total_requests=n_req,
+            prefetch_issued_chunks=0,
+            prefetch_used_chunks=0,
+            cache_stats=out["stats"],
+            stream_pushes=0,
+        )

@@ -63,6 +63,17 @@ USER_LINK_GBPS = 100.0
 
 @dataclasses.dataclass
 class SimConfig:
+    """Configuration of one VDC replay (shared verbatim by all three
+    engines — reference, vector, interval — which is what makes their
+    counter-equivalence contract meaningful; see
+    ``tests/test_engine_equivalence.py`` and ``docs/ARCHITECTURE.md``).
+
+    Fields are grouped as: cache layer (policy/budget/chunking), WAN and
+    origin service model (paper §V-A1), and engine execution knobs
+    (``batched_prediction``, ``interval_shards``) that change *how* a
+    result is computed but never *what* it is.
+    """
+
     cache_policy: str = "lru"
     cache_bytes: int = 128 << 30
     n_service_procs: int = 10
@@ -87,6 +98,18 @@ class SimConfig:
     # the online path, e.g. for benchmarking the prediction layer itself.
     # The reference simulator always replays online.
     batched_prediction: bool = True
+    # Interval engine only.  ``None`` (default): the replay planner picks
+    # between the sequential interval sweep (fine-chunking regime) and the
+    # inherited vector block replay.  ``1``: pin the sequential sweep.
+    # ``N > 1``: the sharded multi-DTN driver — N worker processes (capped
+    # at CPU count and active-DTN count) sweep disjoint DTN subsets in
+    # parallel; exact counters are preserved via the phase-B presence-
+    # timeline reconciliation and eviction-split audit (falling back to
+    # the sweep when an audit check is order-sensitive).  Sharding pays
+    # off on balanced traces / many-core hosts; OOI-like skew (~68% of
+    # requests on one DTN) caps its parallel gain.  Other engines ignore
+    # this knob.
+    interval_shards: int | None = None
 
     def calibrate_origin(self, requests: Sequence["Request"],
                          target_utilization: float = 0.2) -> "SimConfig":
@@ -461,7 +484,9 @@ def run_strategy(
 ) -> SimResult:
     """Run one named strategy: no_cache | cache_only | md1 | md2 | hpm.
 
-    ``engine`` selects the replay implementation:
+    ``engine`` selects the replay implementation (all three are pinned to
+    identical integer counters by ``tests/test_engine_equivalence.py``; see
+    ``docs/ARCHITECTURE.md`` for the layer map):
 
     - ``"vector"`` (default): the array-backed batch-replay engine
       (:mod:`repro.core.engine`) — same results, 1-2 orders of magnitude
@@ -469,10 +494,15 @@ def run_strategy(
       (hpm), prediction runs in batch mode: the whole-trace op stream is
       planned up front through the vmapped ARIMA bank
       (``config.batched_prediction``, on by default).
+    - ``"interval"``: interval-algebra presence tracking plus the sharded
+      multi-DTN phase-A driver (``config.interval_shards`` workers) for
+      static LRU serving (cache_only); dynamic strategies and LFU delegate
+      to the vector machinery.  The fastest engine on serving-bound traces
+      and the only one whose per-request cost is independent of the chunk
+      resolution.
     - ``"reference"``: the per-chunk dict/heap :class:`VDCSimulator` above —
-      the readable semantic baseline the vector engine is verified against
-      (``tests/test_engine_equivalence.py``), always predicting online via
-      per-request ``observe``.
+      the readable semantic baseline the other engines are verified
+      against, always predicting online via per-request ``observe``.
     """
     from repro.core.delivery import make_prefetcher
 
@@ -488,6 +518,10 @@ def run_strategy(
         from repro.core.engine import VectorVDCSimulator
 
         sim = VectorVDCSimulator(grid, pf, config, use_cache=use_cache)
+    elif engine == "interval":
+        from repro.core.engine import IntervalVDCSimulator
+
+        sim = IntervalVDCSimulator(grid, pf, config, use_cache=use_cache)
     else:
         raise ValueError(f"unknown engine: {engine!r}")
     return sim.run(requests, name=strategy)

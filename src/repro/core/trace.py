@@ -286,7 +286,7 @@ class TraceGenerator:
 
     # -- public API ---------------------------------------------------------
 
-    def generate(self) -> list[Request]:
+    def generate(self) -> "RequestList":
         p = self.profile
         n_human = int(round(p.n_users * p.human_user_frac))
         n_program = p.n_users - n_human
@@ -333,7 +333,7 @@ class TraceGenerator:
             dataclasses.replace(r, size_bytes=max(1, int(r.size_bytes * h_factor)))
             for r in human
         ]
-        requests = program + human
+        requests = RequestList(program + human)
         requests.sort(key=lambda r: r.ts)
         return requests
 
@@ -363,8 +363,62 @@ class RequestArrays:
         return int(self.ts.shape[0])
 
 
+class RequestList(list):
+    """A trace: a list of :class:`Request` that memoizes its
+    :class:`RequestArrays` view.
+
+    Replay engines and benchmarks convert the same trace to column arrays on
+    every ``run_strategy`` call; for a full-scale trace that transpose costs
+    more than a whole vectorized replay.  Every mutating list operation
+    invalidates the memoized arrays, so in-place edits (sort, item
+    replacement, appends, ...) can never serve a stale transpose; slicing
+    returns a fresh :class:`RequestList`.
+    """
+
+    _arrays: "RequestArrays | None"
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        self._arrays = None
+
+    def __getitem__(self, i):
+        out = super().__getitem__(i)
+        return RequestList(out) if isinstance(i, slice) else out
+
+
+def _invalidating(name):
+    base = getattr(list, name)
+
+    def op(self, *args, **kw):
+        self._arrays = None
+        return base(self, *args, **kw)
+
+    op.__name__ = name
+    return op
+
+
+for _name in ("__setitem__", "__delitem__", "__iadd__", "__imul__",
+              "append", "extend", "insert", "pop", "remove", "sort",
+              "reverse", "clear"):
+    setattr(RequestList, _name, _invalidating(_name))
+
+
 def requests_to_arrays(requests: Sequence[Request]) -> RequestArrays:
-    """Transpose a list of :class:`Request` into :class:`RequestArrays`."""
+    """Transpose a trace into :class:`RequestArrays`.
+
+    When ``requests`` is a :class:`RequestList` (what the generators return)
+    the transpose is computed once and memoized on the list.
+    """
+    cached = getattr(requests, "_arrays", None)
+    if cached is not None and len(cached) == len(requests):
+        return cached
+    arrays = _requests_to_arrays(requests)
+    if isinstance(requests, RequestList):
+        requests._arrays = arrays
+    return arrays
+
+
+def _requests_to_arrays(requests: Sequence[Request]) -> RequestArrays:
     return RequestArrays(
         np.array([r.ts for r in requests], np.float64),
         np.array([r.user_id for r in requests], np.int64),
@@ -376,7 +430,7 @@ def requests_to_arrays(requests: Sequence[Request]) -> RequestArrays:
     )
 
 
-def make_trace(name: str, seed: int = 0, scale: float = 1.0) -> list[Request]:
+def make_trace(name: str, seed: int = 0, scale: float = 1.0) -> RequestList:
     """Convenience: generate the named observatory trace.
 
     ``scale`` scales user count (for fast tests use scale<1).

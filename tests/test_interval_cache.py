@@ -1,0 +1,260 @@
+"""Unit contract of the interval-algebra cache layer (ISSUE 3 tentpole).
+
+:class:`repro.core.cache.IntervalLRUState` must reproduce the reference
+:class:`repro.core.cache.LRUCache` chunk for chunk — hit/miss decisions,
+eviction order and every counter — while holding presence, sizes and
+recency as sorted disjoint ``[start, end)`` intervals.  These tests pin the
+named edge cases (zero-length/adjacent ranges, merge-on-insert, eviction
+splitting an interval, the full-cache boundary) plus the engine-side
+interval utilities (presence timelines, peer-fetch ranges).  Engine-level
+counter equality on seeded traces lives in ``test_engine_equivalence.py``.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.cache import IntervalLRUState, LRUCache
+from repro.core.delivery import (PeerFetchRange, coalesce_peer_fetches,
+                                 select_peer_sources)
+from repro.core.engine import PresenceTimeline
+
+
+def ref_serve(cache: LRUCache, lo: int, hi: int, size: int) -> int:
+    """The reference simulator's per-chunk cache interaction for one
+    request in the static path: lookup every chunk, then insert every
+    miss."""
+    missing, nh = [], 0
+    for k in range(lo, hi):
+        if cache.lookup(k, size):
+            nh += 1
+        else:
+            missing.append(k)
+    for k in missing:
+        cache.insert(k, size)
+    return nh
+
+
+def keys_of(state: IntervalLRUState) -> list[int]:
+    return [k for s, e in state.intervals() for k in range(s, e)]
+
+
+# ---------------------------------------------------------------------------
+# named edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_zero_length_range_is_a_noop():
+    st = IntervalLRUState(100)
+    assert st.serve(0, 0, 5, 5, 10) == 0
+    assert st.lookup_touch(0, 7, 7, 10) == (0, ())
+    st.check_invariants()
+    assert st.intervals() == []
+    assert (st.hits, st.misses, st.used) == (0, 0, 0)
+
+
+def test_adjacent_ranges_merge_on_insert():
+    st = IntervalLRUState(1000)
+    st.serve(0, 0, 0, 3, 1)          # miss-insert [0, 3)
+    st.serve(1, 0, 3, 6, 1)          # adjacent miss-insert [3, 6)
+    st.check_invariants()
+    assert st.intervals() == [(0, 6)]            # merged coverage
+    assert st.coverage_runs(0, 0, 10) == [(0, 6)]
+    # and a spanning request is one full hit across the merged run
+    nh, miss = st.lookup_touch(0, 0, 6, 1)
+    assert nh == 6 and not miss
+
+
+def test_merge_on_insert_fills_interior_gap():
+    st = IntervalLRUState(1000)
+    st.serve(0, 0, 0, 2, 1)
+    st.serve(1, 0, 4, 6, 1)
+    assert st.intervals() == [(0, 2), (4, 6)]
+    st.serve(2, 0, 2, 4, 1)          # fills the hole
+    st.check_invariants()
+    assert st.intervals() == [(0, 6)]
+
+
+def test_eviction_splits_an_interval():
+    # capacity 4 chunks of size 1; one contiguous insert, then re-touch the
+    # middle so the edges are the LRU victims: evicting them must split the
+    # stored interval, exactly like the per-chunk reference
+    ref = LRUCache(4)
+    st = IntervalLRUState(4)
+    assert ref_serve(ref, 0, 4, 1) == st.serve(0, 0, 0, 4, 1) == 0
+    assert ref_serve(ref, 1, 3, 1) == st.serve(1, 0, 1, 3, 1) == 2
+    assert ref_serve(ref, 10, 12, 1) == st.serve(2, 0, 10, 12, 1) == 0
+    st.check_invariants()
+    assert keys_of(st) == sorted(ref._od.keys()) == [1, 2, 10, 11]
+    assert st.intervals() == [(1, 3), (10, 12)]  # [0,4) was split
+    assert st.evictions == ref.stats.evictions == 2
+
+
+def test_full_cache_boundary():
+    # exactly-full cache: the next single-chunk insert evicts exactly one
+    ref = LRUCache(6)
+    st = IntervalLRUState(6)
+    ref_serve(ref, 0, 3, 2)
+    st.serve(0, 0, 0, 3, 2)
+    assert st.used == st.capacity == 6
+    ref_serve(ref, 5, 6, 2)
+    st.serve(1, 0, 5, 6, 2)
+    st.check_invariants()
+    assert st.used == 6
+    assert st.evictions == ref.stats.evictions == 1
+    assert keys_of(st) == sorted(ref._od.keys()) == [1, 2, 5]
+
+
+def test_oversized_chunk_is_skipped_not_evicted():
+    # reference insert(): a chunk larger than the whole cache is silently
+    # dropped and must not evict anything
+    ref = LRUCache(10)
+    st = IntervalLRUState(10)
+    ref_serve(ref, 0, 5, 2)
+    st.serve(0, 0, 0, 5, 2)
+    ref_serve(ref, 7, 8, 11)
+    st.serve(1, 0, 7, 8, 11)
+    st.check_invariants()
+    assert st.evictions == ref.stats.evictions == 0
+    assert keys_of(st) == sorted(ref._od.keys())
+    assert (st.misses, st.miss_bytes) == (ref.stats.misses,
+                                          ref.stats.miss_bytes)
+
+
+def test_eviction_inside_one_request_self_evicts_in_order():
+    # a request larger than the cache evicts its own oldest chunks while
+    # inserting the newest — reference order must be preserved
+    ref = LRUCache(3)
+    st = IntervalLRUState(3)
+    ref_serve(ref, 0, 5, 1)
+    st.serve(0, 0, 0, 5, 1)
+    st.check_invariants()
+    assert keys_of(st) == sorted(ref._od.keys()) == [2, 3, 4]
+    assert st.evictions == ref.stats.evictions == 2
+
+
+# ---------------------------------------------------------------------------
+# randomized chunk-for-chunk equivalence (incl. the peer-partitioned flow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_matches_reference_randomized(seed):
+    rng = random.Random(seed)
+    cap = rng.choice([23, 37, 50, 200, 1000])
+    ref = LRUCache(cap)
+    st = IntervalLRUState(cap)
+    for step in range(120):
+        obj = rng.randrange(2)
+        lo = obj * 1000 + rng.randrange(0, 60)
+        hi = lo + rng.randrange(0, 12)
+        size = rng.choice([1, 2, 5, 13, 60])
+        assert ref_serve(ref, lo, hi, size) == st.serve(step, obj, lo, hi,
+                                                        size)
+        st.check_invariants()
+        assert keys_of(st) == sorted(ref._od.keys())
+        s = ref.stats
+        assert (s.hits, s.misses, s.hit_bytes, s.miss_bytes, s.evictions,
+                s.inserted_bytes) == \
+               (st.hits, st.misses, st.hit_bytes, st.miss_bytes,
+                st.evictions, st.inserted_bytes)
+
+
+def _runs_from(keys):
+    out = []
+    for k in sorted(keys):
+        if out and out[-1][1] == k:
+            out[-1] = (out[-1][0], k + 1)
+        else:
+            out.append((k, k + 1))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_partitioned_insert_order_matches_reference(seed):
+    """The interval engine's sweep inserts peer-fetched ranges before
+    origin ranges (the reference's ``_serve`` order); eviction decisions
+    must track that order exactly."""
+    rng = random.Random(10_000 + seed)
+    cap = rng.choice([23, 37, 50])
+    ref = LRUCache(cap)
+    st = IntervalLRUState(cap, log_events=False)
+    for step in range(150):
+        obj = rng.randrange(2)
+        lo = obj * 1000 + rng.randrange(0, 40)
+        hi = lo + rng.randrange(0, 10)
+        size = rng.choice([1, 2, 5])
+        nh_i, miss_runs = st.lookup_touch(obj, lo, hi, size)
+        all_miss = [k for a, b in miss_runs for k in range(a, b)]
+        peer = set(k for k in all_miss if rng.random() < 0.4)
+        # reference: lookup+touch, then peer inserts, then origin inserts
+        missing, nh_r = [], 0
+        for k in range(lo, hi):
+            if ref.lookup(k, size):
+                nh_r += 1
+            else:
+                missing.append(k)
+        for k in (k for k in missing if k in peer):
+            ref.insert(k, size)
+        for k in (k for k in missing if k not in peer):
+            ref.insert(k, size)
+        assert nh_r == nh_i
+        st.insert_runs(obj, _runs_from(peer), size, step)
+        st.insert_runs(obj, _runs_from(set(all_miss) - peer), size, step)
+        st.check_invariants()
+        assert keys_of(st) == sorted(ref._od.keys())
+        assert st.evictions == ref.stats.evictions
+
+
+# ---------------------------------------------------------------------------
+# engine-side interval utilities
+# ---------------------------------------------------------------------------
+
+
+def test_presence_timeline_strict_interval_membership():
+    ins = np.array([[2, 10, 13], [7, 20, 21]], np.int64)   # (t, lo, hi)
+    ev = np.array([[5, 10, 11], [9, 20, 21]], np.int64)
+    tl = PresenceTimeline(ins, ev, horizon=20)
+    keys = np.array([10, 10, 10, 11, 12, 20, 20], np.int64)
+    qs = np.array([2, 3, 6, 6, 1, 8, 9], np.int64)
+    got = tl.query(keys, qs).tolist()
+    #   chunk 10: inserted @2 evicted @5 -> present only strictly inside
+    #   chunk 11, 12: inserted @2, never evicted
+    #   chunk 20: inserted @7 evicted @9
+    assert got == [False, True, False, True, False, True, False]
+
+
+def test_presence_timeline_same_position_insert_evict_invisible():
+    # a chunk inserted and self-evicted while serving the same request must
+    # never be visible to peers
+    ins = np.array([[4, 5, 6]], np.int64)
+    ev = np.array([[4, 5, 6]], np.int64)
+    tl = PresenceTimeline(ins, ev, horizon=10)
+    assert not tl.query(np.array([5]), np.array([4])).any()
+    assert not tl.query(np.array([5]), np.array([6])).any()
+
+
+def test_coalesce_peer_fetches_groups_ranges():
+    req = np.array([3, 3, 3, 3, 7], np.int64)
+    keys = np.array([10, 11, 12, 20, 10], np.int64)
+    src = np.array([2, 2, 4, 2, 2], np.int64)
+    got = coalesce_peer_fetches(req, keys, src, dtn=1)
+    assert got == [
+        PeerFetchRange(3, 1, 2, 10, 12),
+        PeerFetchRange(3, 1, 4, 12, 13),
+        PeerFetchRange(3, 1, 2, 20, 21),
+        PeerFetchRange(7, 1, 2, 10, 11),
+    ]
+
+
+def test_select_peer_sources_rules():
+    # bandwidth into the requesting DTN: origin=5; peers 2 and 3 tie at 8,
+    # peer 4 has 9 but only holds chunk 2; peer 5 is below the origin link
+    bw = np.array([5.0, 0.0, 8.0, 8.0, 9.0, 4.0])
+    holders = np.zeros((6, 4), bool)
+    holders[2, 0] = holders[3, 0] = True      # tie -> lowest DTN id wins
+    holders[4, 1] = True                      # best bw
+    holders[5, 2] = True                      # below origin -> rejected
+    src, acc = select_peer_sources(bw, holders)
+    assert acc.tolist() == [True, True, False, False]
+    assert src[0] == 2 and src[1] == 4

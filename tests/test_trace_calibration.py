@@ -76,3 +76,24 @@ class TestTraceShape:
         tr = make_trace("ooi", seed=0, scale=0.05)
         n = OOI_PROFILE.grid.n_objects
         assert all(0 <= r.obj < n for r in tr)
+
+
+def test_request_list_array_cache_invalidates_on_mutation():
+    """RequestList memoizes its RequestArrays view; any in-place mutation
+    (sort, item replacement, append, ...) must drop the memo so engines
+    never replay a stale transpose."""
+    from repro.core.trace import Request, RequestList, requests_to_arrays
+
+    rl = RequestList(Request(float(i), 0, 0, 0.0, 1.0, 1, 0)
+                     for i in range(5))
+    a1 = requests_to_arrays(rl)
+    assert requests_to_arrays(rl) is a1            # memoized
+    rl.reverse()                                   # same length, new order
+    a2 = requests_to_arrays(rl)
+    assert a2 is not a1
+    assert a2.ts[0] == 4.0
+    rl[0] = Request(9.0, 0, 0, 0.0, 1.0, 1, 0)     # item replacement
+    assert requests_to_arrays(rl).ts[0] == 9.0
+    sliced = rl[1:3]
+    assert isinstance(sliced, RequestList)
+    assert requests_to_arrays(sliced) is not requests_to_arrays(rl)
