@@ -751,6 +751,10 @@ class IntervalLRUState:
         # live chunk count per record id: lets the eviction scan skip fully
         # stale FIFO records in O(1) instead of re-walking segment lists
         self._rid_live: dict[int, int] = {}
+        # per-object memo of the size map as numpy arrays — the fused block
+        # replay's presence snapshot.  Hits never touch the size map, so the
+        # memo survives the hot path; any size-map splice drops the entry
+        self._zmemo: dict[int, tuple] = {}
         self._fifo: collections.deque = collections.deque()
         self._next_rid = 1
         # counters (CacheStats-compatible)
@@ -879,7 +883,14 @@ class IntervalLRUState:
     @staticmethod
     def _splice_z(m: list, lo: int, hi: int, mid: "list | None") -> None:
         """Replace ``[lo, hi)`` of a size map with ``mid`` (ownership
-        transferred, or None), keeping boundary-segment remainders."""
+        transferred, or None), keeping boundary-segment remainders.
+
+        Abutting equal-size runs are coalesced: the eviction scan's
+        per-run ceil arithmetic is invariant under merging runs of the
+        same chunk size (consuming ``[a,b)+[b,c)`` front-to-back equals
+        consuming ``[a,c)``), and per-object chunk sizes rarely change,
+        so coalescing keeps the map at O(distinct sizes) runs instead of
+        one run per insert."""
         ss, se, sv = m
         i = IntervalLRUState._overlap_start(ss, se, lo)
         j = i
@@ -893,6 +904,20 @@ class IntervalLRUState:
         if j > i and se[j - 1] > hi:
             new_s.append(hi); new_e.append(se[j - 1])
             new_v.append(sv[j - 1])
+        k = 1
+        while k < len(new_s):
+            if new_s[k] == new_e[k - 1] and new_v[k] == new_v[k - 1]:
+                new_e[k - 1] = new_e[k]
+                del new_s[k], new_e[k], new_v[k]
+            else:
+                k += 1
+        if new_s:
+            if i > 0 and se[i - 1] == new_s[0] and sv[i - 1] == new_v[0]:
+                new_s[0] = ss[i - 1]
+                i -= 1
+            if j < n and ss[j] == new_e[-1] and sv[j] == new_v[-1]:
+                new_e[-1] = se[j]
+                j += 1
         ss[i:j] = new_s; se[i:j] = new_e; sv[i:j] = new_v
 
     def _valid_segs(self, rid: int, obj: int, lo: int,
@@ -923,6 +948,7 @@ class IntervalLRUState:
             if rid not in live:
                 continue                # fully stale record: O(1) skip
             _, obj, lo, hi, src = rec
+            self._zmemo.pop(obj, None)
             segs = self._valid_segs(rid, obj, lo, hi)
             evicted: list[tuple[int, int]] = []
             stopped_at = None
@@ -987,6 +1013,137 @@ class IntervalLRUState:
                         self.split_log.append((src, evicted, remaining))
             if stopped_at is not None:
                 return
+
+    # -- bulk block APIs (fused block-over-intervals replay) -----------------
+
+    def coverage_arrays(self, objs=None) -> tuple[np.ndarray, np.ndarray]:
+        """Presence snapshot as flat globally sorted ``(starts, ends)``
+        int64 arrays (each object owns a disjoint dense key span, so
+        per-object concatenation in object order is globally sorted).  The
+        fused block replay cuts its elementary intervals at these
+        boundaries and stabs them for block-start presence.
+
+        Reads the *size map*, not the recency map: both cover the same key
+        set at all times (inserts and evictions splice identical ranges
+        into both; hits only re-stamp recency), but size runs stay coarse —
+        they never fragment per touch — and mutate only on insert/evict,
+        so the per-object numpy conversion memo (``_zmemo``) survives the
+        hit-dominated hot path.
+
+        ``objs`` (sorted unique object ids) restricts the snapshot to those
+        objects — exact for any query range inside their key spans (spans
+        are disjoint, so no other object's runs can overlap), and the cost
+        drops from the whole cache to the touched objects only."""
+        zm = self._sizes
+        memo = self._zmemo
+        it = sorted(zm) if objs is None else objs
+        ss_l: list = []
+        ee_l: list = []
+        for obj in it:
+            got = memo.get(obj)
+            if got is None:
+                m = zm.get(obj)
+                if m is None or not m[0]:
+                    continue
+                got = memo[obj] = (np.asarray(m[0], np.int64),
+                                   np.asarray(m[1], np.int64))
+            ss_l.append(got[0])
+            ee_l.append(got[1])
+        if not ss_l:
+            z = np.empty(0, np.int64)
+            return z, z
+        if len(ss_l) == 1:
+            return ss_l[0], ee_l[0]
+        return np.concatenate(ss_l), np.concatenate(ee_l)
+
+    def plan_evict_clean(self, max_need: int, blocked_starts: list,
+                         blocked_ends: list) -> int:
+        """Dry-run the eviction scan: bytes freeable in exact LRU order
+        before the first victim chunk inside a *blocked* run (sorted
+        disjoint key runs), capped at ``max_need``.  Pure — walks the FIFO
+        and both maps without mutating them.  The fused block replay uses
+        the result to truncate a block so that its committed inserts can
+        never evict a key the block itself references (which keeps the
+        block-start snapshot valid for every in-block hit, dup and peer
+        decision)."""
+        freed = 0
+        nb = len(blocked_starts)
+        for rec in self._fifo:
+            rid, obj, lo, hi, _src = rec
+            if rid not in self._rid_live:
+                continue
+            zs, ze, zz = self._sizes[obj]
+            for s, e in self._valid_segs(rid, obj, lo, hi):
+                i = bisect.bisect_right(blocked_starts, s) - 1
+                if i >= 0 and blocked_ends[i] > s:
+                    return freed               # next victim chunk blocked
+                j = i + 1
+                stop = e
+                if j < nb and blocked_starts[j] < e:
+                    stop = blocked_starts[j]
+                zi = self._overlap_start(zs, ze, s)
+                p = s
+                while p < stop:
+                    pe = ze[zi] if ze[zi] < stop else stop
+                    freed += (pe - p) * zz[zi]
+                    p = pe
+                    zi += 1
+                if freed >= max_need:
+                    return freed
+                if stop < e:
+                    return freed               # rest of this run blocked
+        return freed
+
+    def commit_block(self, size_recs: list, recency_recs: list) -> None:
+        """Bulk-commit one fused replay block.
+
+        ``size_recs``: ``(obj, lo, hi, req_pos, size)`` insert runs merged
+        per *inserting* (first-toucher) request, in trace order — they
+        carry presence bookkeeping: size map, ``used``/``n_live``/
+        ``inserted_bytes``, ``obj_hi`` and (in log mode) the miss/insert
+        logs plus the request's audit group.
+
+        ``recency_recs``: ``(obj, lo, hi, src)`` runs merged per final
+        stamp, ordered by (last-touching request, hit/peer/origin phase,
+        ascending key) — exactly the reference's per-chunk final recency
+        order, so appending them as FIFO records reproduces its LRU order.
+        ``src`` is the last toucher's position for its own single-touch
+        inserts and ``-1`` for re-touches, mirroring ``lookup_touch`` /
+        ``insert_runs``.  Equivalent to replaying the block's requests one
+        by one because only each chunk's *final* stamp is observable: the
+        caller truncates blocks so no in-block key is evicted mid-block,
+        and intermediate stamps of multiply-touched chunks are therefore
+        never consulted."""
+        log = self._log
+        oh = self.obj_hi
+        objs = self._objs
+        sizes = self._sizes
+        zmemo = self._zmemo
+        for obj, a, b, src, size in size_recs:
+            zmemo.pop(obj, None)
+            zmap = sizes.get(obj)
+            if zmap is None:
+                objs[obj] = [[], [], []]
+                zmap = sizes[obj] = [[], [], []]
+            self._splice_z(zmap, a, b, ([a], [b], [size]))
+            nm = b - a
+            self.used += nm * size
+            self.n_live += nm
+            self.inserted_bytes += nm * size
+            if b > oh.get(obj, 0):
+                oh[obj] = b
+            if log:
+                self.miss_log.append((src, a, b))
+                self.insert_log.append((src, a, b))
+        fifo = self._fifo
+        for obj, a, b, src in recency_recs:
+            rid = self._next_rid
+            self._next_rid = rid + 1
+            fifo.append((rid, obj, a, b, src))
+            self._splice_r(objs[obj], a, b, [[a], [b], [rid]])
+            if log and src >= 0:
+                self._req_records.setdefault(src, []).append(
+                    (rid, obj, a, b))
 
     # -- serving -------------------------------------------------------------
 
@@ -1126,6 +1283,7 @@ class IntervalLRUState:
         oh = self.obj_hi
         if runs[-1][1] > oh.get(obj, 0):
             oh[obj] = runs[-1][1]
+        self._zmemo.pop(obj, None)
         if self.used + nm * size <= self.capacity:
             fifo = self._fifo
             m = self._objs[obj]

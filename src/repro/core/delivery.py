@@ -220,6 +220,53 @@ def coalesce_peer_fetches(req_pos: np.ndarray, keys: np.ndarray,
     return out
 
 
+def select_peer_sources_ranges(bw_col: np.ndarray, holders: np.ndarray
+                               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Range-level variant of :func:`select_peer_sources` for the fused
+    block replay: resolve peer sources for a batch of missing key *runs*
+    that may belong to requests on different DTNs.
+
+    ``bw_col[s, c]`` is the link bandwidth from DTN ``s`` into run ``c``'s
+    requesting DTN (column ``bw[:, dtn_of_run]`` of the link matrix, so row
+    0 is each run's origin link); ``holders[s, c]`` says whether DTN ``s``
+    holds run ``c`` in full at the run's serve time.  The caller must
+    already have cleared the origin row and each run's own-DTN entry.
+
+    Returns ``(src, best_bw, accepted)`` under the reference's §IV-D rule:
+    iterate candidate DTNs ascending keeping strict bandwidth improvements
+    (max bandwidth, ties to the lowest DTN id), accept only where the
+    winner strictly beats the run's origin link."""
+    n = holders.shape[1]
+    src = np.zeros(n, np.int64)
+    best = np.zeros(n, np.float64)
+    for d2 in range(1, holders.shape[0]):
+        b2 = bw_col[d2]
+        upd = holders[d2] & (b2 > best)
+        if upd.any():
+            src[upd] = d2
+            best[upd] = b2[upd]
+    accepted = best > bw_col[0]
+    return src, best, accepted
+
+
+def coalesce_peer_ranges(req_pos: np.ndarray, dtn: np.ndarray,
+                         src: np.ndarray, key_lo: np.ndarray,
+                         key_hi: np.ndarray) -> list[PeerFetchRange]:
+    """Merge accepted per-run peer decisions into maximal
+    :class:`PeerFetchRange` transfers (same request, same source, abutting
+    key runs).  Runs must arrive grouped by request with keys ascending
+    within each request — the fused block replay's natural emission order."""
+    out: list[PeerFetchRange] = []
+    for r, d, s, a, b in zip(req_pos.tolist(), dtn.tolist(), src.tolist(),
+                             key_lo.tolist(), key_hi.tolist()):
+        if out and out[-1].req_pos == r and out[-1].src == s \
+                and out[-1].key_hi == a:
+            out[-1] = out[-1]._replace(key_hi=b)
+        else:
+            out.append(PeerFetchRange(r, d, s, a, b))
+    return out
+
+
 def make_prefetcher(kind: str, grid: ObjectGrid,
                     training_requests: Sequence[Request] | None = None):
     kind = kind.lower()

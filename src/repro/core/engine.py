@@ -48,7 +48,9 @@ import numpy as np
 from repro.core.cache import (CacheStats, IntervalLRUState, chunk_bytes,
                               chunk_bounds_bulk, make_int_cache_state)
 from repro.core.delivery import (PeerFetchRange, coalesce_peer_fetches,
-                                 select_peer_sources)
+                                 coalesce_peer_ranges,
+                                 select_peer_sources,
+                                 select_peer_sources_ranges)
 from repro.core.hpm import PrefetchOp
 from repro.core.placement import PlacementEngine
 from repro.core.simulator import (DEFAULT_BANDWIDTH_GBPS, GBPS,
@@ -1074,14 +1076,445 @@ class PresenceTimeline:
         return (idx >= 0) & (self._kin[idc] == keys) & (self._tout[idc] > q)
 
 
+# --------------------------------------------------------------------------
+# fused block-over-intervals replay
+#
+# The coarse-regime hot path: classify a whole *block* of requests against
+# block-start IntervalLRUState snapshots instead of per-chunk arrays.  The
+# exactness argument is the vector engine's, lifted to intervals:
+#
+# - the block's key union is handed to the eviction planner as a *blocked*
+#   set, and the block is truncated so its committed inserts never need to
+#   evict a blocked key — therefore no in-block key (hit, dup or peer
+#   lookup target, on ANY DTN) can disappear mid-block, and the block-start
+#   snapshots stay valid for every in-block decision;
+# - chunk ranges are cut into *elementary cells* at every request endpoint
+#   and every snapshot segment boundary, so each cell is uniform w.r.t.
+#   every DTN's presence and every request's coverage; per (DTN, cell) a
+#   first-coverage / last-coverage attribution replaces the vector path's
+#   per-chunk radix sort: a cell is a hit for request r iff it was present
+#   at block start or first touched by an earlier in-block request, else it
+#   is r's insert (and r resolves its peer source against the other DTNs'
+#   snapshot-or-earlier-touch coverage — the reference's §IV-D rule);
+# - block evictions collapse to the existing `_evict_until(cum_bytes, r)`
+#   per triggering request: the reference's interleaved per-chunk
+#   evict-then-insert loop frees, by the end of request r, exactly the
+#   minimal LRU-order chunk prefix covering the cumulative insert bytes
+#   through r — which is what `_evict_until` computes when handed that
+#   cumulative as its `size` argument (inserts are committed after);
+# - commits land as run merges: one size-map record per inserting request's
+#   maximal miss run, one recency record per merged (last toucher, phase)
+#   run ordered by (request, hit/peer/origin phase, key) — the reference's
+#   final per-chunk stamp order, so FIFO order and hence future evictions
+#   are exact.  Intermediate stamps of multiply-touched chunks are never
+#   observable (nothing in-block is evicted), so only final stamps matter.
+# --------------------------------------------------------------------------
+
+
+def _merge_key_runs(lo: np.ndarray,
+                    hi: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Union of ``[lo, hi)`` key ranges as sorted disjoint runs
+    ``(starts, ends)``; abutting ranges merge."""
+    n = len(lo)
+    ev = np.concatenate((lo, hi))
+    typ = np.concatenate((np.ones(n, np.int64), np.full(n, -1, np.int64)))
+    # stable: at equal keys the starts (first half) sort ahead of the ends,
+    # so touching ranges stay one run
+    order = np.argsort(ev, kind="stable")
+    ev = ev[order]
+    depth = np.cumsum(typ[order])
+    prev = np.concatenate(([0], depth[:-1]))
+    return ev[(prev == 0) & (depth > 0)], ev[(depth == 0) & (prev > 0)]
+
+
+_FUSED_MAX_INCIDENCE = 1 << 21
+
+
+def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
+                        pos_a: np.ndarray, dtn_a: np.ndarray,
+                        obj_a: np.ndarray, lo_a: np.ndarray,
+                        hi_a: np.ndarray, pc_a: np.ndarray):
+    """Fused replay of one request sequence (trace order) over per-DTN
+    :class:`IntervalLRUState` caches.
+
+    Two callers:
+
+    - the global fused path (``log=False``): all DTNs interleaved, peer
+      ranges resolved inline against the block snapshots (exact, no
+      audit); returns per-request ``(nh, peer_chunks, peer_dt,
+      still_chunks, peer_ranges)``;
+    - the sharded driver's per-DTN phase A (``log=True``): one DTN's
+      subsequence, no peer logic, miss/insert/evict/split logs recorded on
+      the state for phase B; returns ``None``.
+    """
+    n = len(pos_a)
+    n_dtn = max(states) + 1
+    cap = next(iter(states.values())).capacity
+    active = sorted(states)
+    if not log:
+        nh_loc = np.zeros(n, np.int64)
+        acc_loc = np.zeros(n, np.int64)
+        pdt_loc = np.zeros(n, np.float64)
+        still_loc = np.zeros(n, np.int64)
+        peer_ranges: list = []
+        # peer candidates per DTN, best-first, for the scalar fallback
+        # (same pruning + greedy order as the sequential sweep)
+        cands: dict[int, list] = {}
+        for d in active:
+            ob = float(bw[0, d])
+            cl = [(float(bw[d2, d]), d2) for d2 in active
+                  if d2 != d and float(bw[d2, d]) > ob]
+            cl.sort(key=lambda t: (-t[0], t[1]))
+            cands[d] = cl
+
+    def serve_scalar(r: int) -> None:
+        d = int(dtn_a[r]); o = int(obj_a[r])
+        lo = int(lo_a[r]); hi = int(hi_a[r])
+        pc = int(pc_a[r]); ridx = int(pos_a[r])
+        st = states[d]
+        if log:
+            st.serve(ridx, o, lo, hi, pc)
+            return
+        nh, miss = st.lookup_touch(o, lo, hi, pc)
+        nh_loc[r] = nh
+        if not miss:
+            return
+        n_acc = 0
+        peer_dt = 0.0
+        if enable_peer:
+            unassigned = miss
+            acc_runs: list = []
+            for bwv, d2 in cands[d]:
+                if not unassigned:
+                    break
+                cov_of = states[d2].coverage_runs
+                rem: list = []
+                for a, b_ in unassigned:
+                    p2 = a
+                    for s, e in cov_of(o, a, b_):
+                        if s > p2:
+                            rem.append((p2, s))
+                        acc_runs.append((s, e))
+                        n_acc += e - s
+                        peer_dt += (e - s) * (pc / bwv)
+                        peer_ranges.append(PeerFetchRange(ridx, d, d2, s, e))
+                        p2 = e
+                    if p2 < b_:
+                        rem.append((p2, b_))
+                unassigned = rem
+            if acc_runs:
+                acc_runs.sort()
+                st.insert_runs(o, acc_runs, pc, ridx)
+            still = unassigned
+        else:
+            still = miss
+        if still:
+            still_loc[r] = sum(b_ - a for a, b_ in still)
+            st.insert_runs(o, still, pc, ridx)
+        acc_loc[r] = n_acc
+        pdt_loc[r] = peer_dt
+
+    i = 0
+    blk = 512
+    degen = 0
+    BIG = 1 << 62
+    while i < n:
+        if degen >= 4:
+            # eviction-bound stretch: blocks keep collapsing, so serve a
+            # run of requests scalarly before re-probing the block path
+            stop = min(n, i + 256)
+            for r in range(i, stop):
+                serve_scalar(r)
+            i = stop
+            degen = 0
+            blk = 512
+            continue
+        j = min(n, i + blk)
+        was_trunc = False
+        while True:
+            # ---- elementary-cell decomposition of [i, j) ------------------
+            B = j - i
+            lo = lo_a[i:j]; hi = hi_a[i:j]
+            dt_b = dtn_a[i:j]; pc_b = pc_a[i:j]
+            us, ue = _merge_key_runs(lo, hi)
+            o_blk = np.unique(obj_a[i:j]).tolist()
+            covs = {d: states[d].coverage_arrays(o_blk) for d in active}
+            pts = [lo, hi]
+            for d in active:
+                cs, ce = covs[d]
+                if len(cs):
+                    # keep only segments overlapping the block's key union
+                    u_idx = np.searchsorted(ue, cs, side="right")
+                    ok = u_idx < len(us)
+                    ov = np.zeros(len(cs), bool)
+                    ov[ok] = us[u_idx[ok]] < ce[ok]
+                    if ov.any():
+                        pts.append(cs[ov])
+                        pts.append(ce[ov])
+            C = np.unique(np.concatenate(pts))
+            rs = np.searchsorted(C, lo)
+            re_ = np.searchsorted(C, hi)
+            cnt = re_ - rs
+            cum = np.cumsum(cnt)
+            if int(cum[-1]) > _FUSED_MAX_INCIDENCE and B > 1:
+                nb = max(1, int(np.searchsorted(
+                    cum, _FUSED_MAX_INCIDENCE, side="right")))
+                if nb < B:
+                    j = i + nb
+                    continue
+            I = int(cum[-1])
+            M = len(C) - 1
+            cell_len = np.diff(C)
+            inc = np.repeat(np.arange(B), cnt)
+            cell = np.arange(I) - np.repeat(cum - cnt - rs, cnt)
+            # ---- snapshot presence + first/last attribution ---------------
+            clo = C[:-1]
+            snap = np.zeros((n_dtn, M), bool)
+            for d in active:
+                cs, ce = covs[d]
+                if len(cs):
+                    ix = np.searchsorted(cs, clo, side="right") - 1
+                    ok = ix >= 0
+                    snap[d, ok] = ce[ix[ok]] > clo[ok]
+            first2 = np.full((n_dtn, M), BIG, np.int64)
+            last2 = np.full((n_dtn, M), -1, np.int64)
+            d_inc = dt_b[inc]
+            duniq: dict[int, tuple] = {}
+            for d in active:
+                sub = np.nonzero(d_inc == d)[0]
+                if not len(sub):
+                    continue
+                cd = cell[sub]
+                idv = inc[sub]                # ascending within each cell
+                order = np.argsort(cd, kind="stable")
+                sc = cd[order]
+                si = idv[order]
+                head = np.empty(len(sc), bool)
+                head[0] = True
+                head[1:] = sc[1:] != sc[:-1]
+                tail = np.empty(len(sc), bool)
+                tail[-1] = True
+                tail[:-1] = head[1:]
+                uc, fi, la = sc[head], si[head], si[tail]
+                duniq[d] = (uc, fi, la)
+                first2[d, uc] = fi
+                last2[d, uc] = la
+            snap_inc = snap[d_inc, cell]
+            first_inc = first2[d_inc, cell]
+            hit = snap_inc | (first_inc < inc)
+            ins_idx = np.nonzero(~hit)[0]     # first-touch absent cells
+            ins_inc = inc[ins_idx]
+            ins_cell = cell[ins_idx]
+            ins_d = d_inc[ins_idx]
+            ins_len = cell_len[ins_cell]
+            ins_bytes = ins_len * pc_b[ins_inc]
+            # ---- eviction planning + block truncation ---------------------
+            b_trunc = B
+            over_big = np.nonzero(pc_b > cap)[0]
+            if len(over_big):
+                # the reference silently skips oversized inserts; serve the
+                # request scalarly so later touches of its keys stay misses
+                b_trunc = int(over_big[0])
+            evict_plan: dict[int, tuple] = {}
+            if b_trunc:
+                bs_l = us.tolist()
+                be_l = ue.tolist()
+                for d in active:
+                    m_ = ins_d == d
+                    if not m_.any():
+                        continue
+                    st = states[d]
+                    bb = np.zeros(B, np.int64)
+                    np.add.at(bb, ins_inc[m_], ins_bytes[m_])
+                    cum_d = np.cumsum(bb)
+                    room = st.capacity - st.used
+                    total = int(cum_d[-1])
+                    if total <= room:
+                        continue
+                    clean = st.plan_evict_clean(total - room, bs_l, be_l)
+                    evict_plan[d] = (bb, cum_d)
+                    if total > room + clean:
+                        b_trunc = min(b_trunc, int(np.searchsorted(
+                            cum_d, room + clean, side="right")))
+            if b_trunc < B:
+                was_trunc = True
+                if b_trunc == 0:
+                    break
+                j = i + b_trunc
+                continue
+            break
+        if b_trunc == 0:
+            serve_scalar(i)
+            i += 1
+            degen += 1
+            blk = max(256, blk >> 1)
+            continue
+        # ---- peer resolution for the block's insert cells -----------------
+        n_ins = len(ins_idx)
+        acc2 = None
+        acc = np.zeros(n_ins, bool)
+        if not log and enable_peer and n_ins:
+            holders = np.zeros((n_dtn, n_ins), bool)
+            for d2 in active:
+                # a DTN holds a cell at serve time iff it was present at
+                # block start or an earlier in-block request of that DTN
+                # touched it (hit or insert — nothing in-block is evicted)
+                holders[d2] = (snap[d2, ins_cell]
+                               | (first2[d2, ins_cell] < ins_inc))
+            # own-DTN entries are False by construction (the first toucher
+            # defines the insert); the origin row was never set
+            src, best_bw, acc = select_peer_sources_ranges(
+                bw[:, ins_d], holders)
+            acc2 = np.zeros((n_dtn, M), bool)
+            acc2[ins_d[acc], ins_cell[acc]] = True
+        # ---- per-request / per-DTN accounting -----------------------------
+        hit_i = np.nonzero(hit)[0]
+        hlen = cell_len[cell[hit_i]]
+        nh_b = np.bincount(inc[hit_i], weights=hlen,
+                           minlength=B).astype(np.int64)
+        nm_b = np.bincount(ins_inc, weights=ins_len,
+                           minlength=B).astype(np.int64)
+        for d in active:
+            md = dt_b == d
+            if not md.any():
+                continue
+            st = states[d]
+            st.hits += int(nh_b[md].sum())
+            st.hit_bytes += int((nh_b[md] * pc_b[md]).sum())
+            st.misses += int(nm_b[md].sum())
+            st.miss_bytes += int((nm_b[md] * pc_b[md]).sum())
+        if not log:
+            nh_loc[i:j] = nh_b
+            if n_ins:
+                na = np.bincount(ins_inc[acc], weights=ins_len[acc],
+                                 minlength=B).astype(np.int64)
+                acc_loc[i:j] = na
+                still_loc[i:j] = nm_b - na
+                if acc.any():
+                    pdt_loc[i:j] = np.bincount(
+                        ins_inc[acc],
+                        weights=ins_len[acc]
+                        * (pc_b[ins_inc[acc]] / best_bw[acc]),
+                        minlength=B)
+                    peer_ranges.extend(coalesce_peer_ranges(
+                        pos_a[i + ins_inc[acc]], ins_d[acc], src[acc],
+                        C[ins_cell[acc]], C[ins_cell[acc] + 1]))
+        # ---- evictions: replay the reference's cumulative arithmetic ------
+        for d, (bb, cum_d) in evict_plan.items():
+            st = states[d]
+            ev = st._evict_until
+            for r_loc in np.nonzero(bb)[0].tolist():
+                cv = int(cum_d[r_loc])
+                if st.used + cv > st.capacity:
+                    ev(cv, int(pos_a[i + r_loc]))
+        # ---- run-merge commits --------------------------------------------
+        for d in active:
+            got = duniq.get(d)
+            if got is None:
+                continue
+            uc, fi, la = got
+            st = states[d]
+            ins_flag = ~snap[d, uc]           # first touch was a miss
+            size_recs: list = []
+            if ins_flag.any():
+                iuc = uc[ins_flag]
+                ifi = fi[ins_flag]
+                o2 = np.lexsort((iuc, ifi))   # trace order, ascending keys
+                iuc = iuc[o2]; ifi = ifi[o2]
+                brk = np.empty(len(iuc), bool)
+                brk[0] = True
+                if log:
+                    # log mode: miss/insert logs and audit groups need the
+                    # per-inserting-request granularity
+                    brk[1:] = ((ifi[1:] != ifi[:-1])
+                               | (iuc[1:] != iuc[:-1] + 1))
+                else:
+                    # global mode: size records only feed the size map and
+                    # byte accounting, both invariant under merging
+                    # contiguous equal-size runs — and per-object chunk
+                    # sizes rarely change, so this collapses a block's
+                    # inserts to ~one splice per object
+                    ipc = pc_b[ifi]
+                    iob = obj_a[i + ifi]
+                    brk[1:] = ((ipc[1:] != ipc[:-1]) | (iob[1:] != iob[:-1])
+                               | (iuc[1:] != iuc[:-1] + 1))
+                gs = np.nonzero(brk)[0]
+                ge = np.append(gs[1:], len(iuc)) - 1
+                size_recs = list(zip(
+                    obj_a[i + ifi[gs]].tolist(), C[iuc[gs]].tolist(),
+                    C[iuc[ge] + 1].tolist(), pos_a[i + ifi[gs]].tolist(),
+                    pc_b[ifi[gs]].tolist()))
+            # final recency order: (last toucher, hit/peer/origin phase,
+            # ascending key) — single-touch inserts carry their phase, every
+            # re-touched cell ends as a plain hit touch of its last toucher
+            single = ins_flag & (fi == la)
+            if acc2 is not None:
+                phase = np.where(single,
+                                 np.where(acc2[d, uc], 1, 2), 0)
+            else:
+                phase = np.where(single, 2, 0)
+            src_rec = np.where(single, pos_a[i + la], -1)
+            o3 = np.lexsort((uc, phase, la))
+            uc3 = uc[o3]; ph3 = phase[o3]
+            la3 = la[o3]; sr3 = src_rec[o3]
+            brk = np.empty(len(uc3), bool)
+            brk[0] = True
+            if log:
+                brk[1:] = ((la3[1:] != la3[:-1]) | (ph3[1:] != ph3[:-1])
+                           | (uc3[1:] != uc3[:-1] + 1))
+            else:
+                # global mode: the FIFO consumes records front-to-back and
+                # chunks ascending within a record, so records adjacent in
+                # commit order with contiguous ascending keys evict
+                # identically whether split or merged — and ``src`` is only
+                # consulted by the log-mode audit.  Merge maximally: only a
+                # key gap or an object change forces a new record.  Shorter
+                # FIFOs make every later eviction scan cheaper.
+                ob3 = obj_a[i + la3]
+                brk[1:] = (uc3[1:] != uc3[:-1] + 1) | (ob3[1:] != ob3[:-1])
+            gs = np.nonzero(brk)[0]
+            ge = np.append(gs[1:], len(uc3)) - 1
+            rec_recs = list(zip(
+                obj_a[i + la3[gs]].tolist(), C[uc3[gs]].tolist(),
+                C[uc3[ge] + 1].tolist(), sr3[gs].tolist()))
+            st.commit_block(size_recs, rec_recs)
+        i = j
+        if was_trunc:
+            # the blocker request is served scalarly right away (exact for
+            # oversize inserts and eviction pressure alike)
+            if i < n:
+                serve_scalar(i)
+                i += 1
+            degen += 1 if b_trunc < 8 else 0
+            blk = max(256, blk >> 1)
+        else:
+            degen = 0
+            blk = min(blk << 1, 65536)
+    if log:
+        return None
+    return nh_loc, acc_loc, pdt_loc, still_loc, peer_ranges
+
+
 def _interval_replay_payload(capacity: int, idx: list, obj: list, lo: list,
-                             kk: list, pc: list) -> dict:
-    """Phase A for one DTN: sweep its request subsequence through an
-    :class:`IntervalLRUState` and package the logs for phase B."""
+                             kk: list, pc: list, fused: bool = False) -> dict:
+    """Phase A for one DTN: replay its request subsequence through an
+    :class:`IntervalLRUState` and package the logs for phase B — request by
+    request, or through the fused block path in the coarse regime."""
     st = IntervalLRUState(capacity)
-    serve = st.serve
-    for i_, o_, l_, k_, p_ in zip(idx, obj, lo, kk, pc):
-        serve(i_, o_, l_, l_ + k_, p_)
+    if fused:
+        n = len(idx)
+        lo_a = np.asarray(lo, np.int64)
+        # single-DTN replay: the DTN id is never consulted in log mode
+        _fused_block_replay({1: st}, None, False, True,
+                            np.asarray(idx, np.int64),
+                            np.ones(n, np.int64),
+                            np.asarray(obj, np.int64), lo_a,
+                            lo_a + np.asarray(kk, np.int64),
+                            np.asarray(pc, np.int64))
+    else:
+        serve = st.serve
+        for i_, o_, l_, k_, p_ in zip(idx, obj, lo, kk, pc):
+            serve(i_, o_, l_, l_ + k_, p_)
 
     def log3(log: list) -> np.ndarray:
         flat = np.fromiter(itertools.chain.from_iterable(log), np.int64,
@@ -1096,10 +1529,12 @@ def _interval_replay_payload(capacity: int, idx: list, obj: list, lo: list,
     )
 
 
-def _interval_worker_main(conn, capacity: int, jobs: list) -> None:
+def _interval_worker_main(conn, capacity: int, jobs: list,
+                          fused: bool = False) -> None:
     """Forked shard worker: replay a bin of DTNs, ship payloads back."""
     try:
-        out = {d: _interval_replay_payload(capacity, *job) for d, job in jobs}
+        out = {d: _interval_replay_payload(capacity, *job, fused=fused)
+               for d, job in jobs}
         conn.send((True, out))
     except BaseException as e:          # surfaced in the driver
         conn.send((False, repr(e)))
@@ -1114,21 +1549,27 @@ class IntervalVDCSimulator(VectorVDCSimulator):
     Drop-in for the other engines.  The static LRU serving path goes
     through a small *replay planner*:
 
-    - in the **fine-chunking regime** (roughly ≥ ``SWEEP_MIN_CHUNKS_PER_REQ``
-      chunk positions per request — sub-five-minute chunks on the paper's
-      traces) it runs the interval machinery, whose per-request cost is
-      governed by *segment* counts, not chunk counts: the sequential global
-      sweep (:meth:`_run_sweep`), or the optimistic sharded driver when
-      ``SimConfig.interval_shards > 1``;
-    - in the coarse regime it inherits the vector engine's block replay,
-      which wins there on bulk NumPy throughput.
+    - in the **coarse regime** (mean chunk positions per live request below
+      ``SWEEP_MIN_CHUNKS_PER_REQ``) it runs the **fused block-over-
+      intervals replay** (:meth:`_run_fused` / :func:`_fused_block_replay`):
+      the vector engine's block discipline — block-start snapshot,
+      first/last-coverage classification, truncation so nothing in-block is
+      ever evicted — executed directly on :class:`IntervalLRUState`, with
+      run-level peer resolution, run-merge commits and run-split evictions
+      instead of per-chunk radix sorts and scatters;
+    - in the **fine-chunking regime** (sub-five-minute chunks on the
+      paper's traces) it runs the sequential global sweep
+      (:meth:`_run_sweep`), whose per-request cost is governed by *segment*
+      counts, not chunk counts;
+    - ``SimConfig.interval_shards > 1`` opts into the optimistic sharded
+      driver (:meth:`_run_sharded`), whose per-DTN phase A itself uses the
+      fused block path in the coarse regime; ``interval_shards = 1`` pins
+      the sequential sweep.
 
-    Setting ``interval_shards`` (to any value, including 1) pins the
-    interval machinery regardless of the heuristic.  Strategies with
-    dynamic events (prefetch / streaming / placement), LFU caches and
-    ``use_cache=False`` runs always delegate to the inherited vector
-    paths.  All routes produce identical integer counters
-    (``tests/test_engine_equivalence.py``).
+    Strategies with dynamic events (prefetch / streaming / placement), LFU
+    caches and ``use_cache=False`` runs always delegate to the inherited
+    vector paths.  All routes produce identical integer counters
+    (``tests/test_engine_equivalence.py``, ``tests/test_engine_fuzz.py``).
     """
 
     #: auto-planner threshold: mean chunk positions per live request above
@@ -1148,17 +1589,6 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         if not (static and self.use_cache
                 and self.cfg.cache_policy.lower() == "lru"):
             return super().run(requests, name)
-        if self.cfg.interval_shards is None:
-            arr = requests_to_arrays(requests)
-            scale = 1.0 / self.cfg.traffic_scale
-            first, n_chunks = chunk_bounds_bulk(
-                arr.tr_start, np.minimum(arr.tr_end, arr.ts * scale),
-                self.cfg.chunk_seconds)
-            live = (n_chunks > 0) & (arr.size_bytes > 0)
-            n_live = int(live.sum())
-            mean_k = float(n_chunks[live].sum()) / n_live if n_live else 0.0
-            if mean_k < self.SWEEP_MIN_CHUNKS_PER_REQ:
-                return super().run(requests, name)
         return self._run_static_interval(requests, name)
 
     # -- phase A -------------------------------------------------------------
@@ -1173,12 +1603,21 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         w = self.cfg.interval_shards
         if w is None:
             return 1
-        return max(1, min(int(w), n_jobs, (os.cpu_count() or 1)))
+        # an explicit shard count is honored even past os.cpu_count():
+        # oversubscription only costs scheduling, while clamping would
+        # silently reduce the sharded driver to the sweep on small hosts
+        # (leaving the `interval_shards=2` contract untested on 1-core CI)
+        return max(1, min(int(w), n_jobs))
 
-    def _phase_a(self, dtn_arr: np.ndarray, zero: np.ndarray,
-                 obj_arr: np.ndarray, base: np.ndarray, k_eff: np.ndarray,
-                 per_chunk: np.ndarray) -> dict[int, dict]:
-        live = ~zero
+    def _phase_a(self, P: dict) -> dict[int, dict]:
+        dtn_arr = P["dtn"]
+        live = ~P["zero"]
+        obj_arr, base = P["obj"], P["base"]
+        k_eff, per_chunk = P["k_eff"], P["pc"]
+        # in the coarse regime each per-DTN replay itself goes through the
+        # fused block path; in the fine regime the per-request interval
+        # sweep already wins (segment-bound, not chunk-bound)
+        fused = P["mean_k"] < self.SWEEP_MIN_CHUNKS_PER_REQ
         jobs: dict[int, tuple] = {}
         loads: list[tuple[int, int]] = []
         for d in range(1, self.n_dtn):
@@ -1191,7 +1630,8 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         cap = self.cfg.cache_bytes
         n_workers = self._resolve_workers(len(jobs))
         if n_workers <= 1:
-            return {d: _interval_replay_payload(cap, *jobs[d]) for d in jobs}
+            return {d: _interval_replay_payload(cap, *jobs[d], fused=fused)
+                    for d in jobs}
         # greedy bin-packing by request count; the driver replays the
         # heaviest bin itself while forked workers handle the rest
         loads.sort(reverse=True)
@@ -1206,17 +1646,19 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         try:
             ctx = multiprocessing.get_context("fork")
         except ValueError:                       # no fork on this platform
-            return {d: _interval_replay_payload(cap, *jobs[d]) for d in jobs}
+            return {d: _interval_replay_payload(cap, *jobs[d], fused=fused)
+                    for d in jobs}
         procs = []
         for b in bins[1:]:
             parent_conn, child_conn = ctx.Pipe(duplex=False)
             p = ctx.Process(target=_interval_worker_main,
-                            args=(child_conn, cap, [(d, jobs[d]) for d in b]),
+                            args=(child_conn, cap,
+                                  [(d, jobs[d]) for d in b], fused),
                             daemon=True)
             p.start()
             child_conn.close()
             procs.append((p, parent_conn))
-        payloads = {d: _interval_replay_payload(cap, *jobs[d])
+        payloads = {d: _interval_replay_payload(cap, *jobs[d], fused=fused)
                     for d in bins[0]}
         for p, conn in procs:
             ok, out = conn.recv()
@@ -1250,12 +1692,20 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             lo_min, hi_max = 0, 1
         off = max(0, -lo_min) + 8
         span = hi_max + off + 8
+        n_live = int(live.sum())
+        mean_k = float(k_eff[live].sum()) / n_live if n_live else 0.0
         P = dict(arr=arr, n_req=n_req, now=now_arr, zero=zero, k_eff=k_eff,
                  pc=per_chunk, dtn=dtn_arr, obj=arr.obj,
-                 base=arr.obj * span + first + off)
+                 base=arr.obj * span + first + off, mean_k=mean_k)
         out = None
-        if self._resolve_workers(int(np.unique(dtn_arr[~zero]).size
-                                     or 1)) > 1:
+        if cfg.interval_shards is None:
+            if mean_k < self.SWEEP_MIN_CHUNKS_PER_REQ:
+                # coarse regime: the fused block-over-intervals replay
+                # (inline peers against block snapshots — always exact)
+                out = self._run_fused(P)
+            # fine regime: the sequential sweep below
+        elif self._resolve_workers(int(np.unique(dtn_arr[~zero]).size
+                                       or 1)) > 1:
             try:
                 out = self._run_sharded(P)
             except _IntervalOrderAmbiguity:
@@ -1266,6 +1716,40 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         if out is None:
             out = self._run_sweep(P)
         return self._finish(P, out, name)
+
+    # -- global fused block replay (coarse-regime default) -------------------
+
+    def _run_fused(self, P: dict) -> dict:
+        """Replay the whole trace through :func:`_fused_block_replay`: the
+        vector engine's block discipline (snapshot + truncation) executed
+        on interval state, with run-level peer resolution and commits."""
+        cfg = self.cfg
+        n_req = P["n_req"]
+        live = np.nonzero(~P["zero"])[0]
+        lo_a = P["base"][live]
+        cap = cfg.cache_bytes
+        states = {d: IntervalLRUState(cap, log_events=False)
+                  for d in range(1, self.n_dtn)}
+        nh_l, acc_l, pdt_l, still_l, peer_ranges = _fused_block_replay(
+            states, self.bw, cfg.enable_peer_cache, False,
+            live, P["dtn"][live], P["obj"][live], lo_a,
+            lo_a + P["k_eff"][live], P["pc"][live])
+        per_chunk = P["pc"]
+        nh_full = np.zeros(n_req, np.int64)
+        nh_full[live] = nh_l
+        o_peer = np.zeros(n_req, np.int64)
+        o_peer[live] = acc_l * P["pc"][live]
+        o_pt = np.zeros(n_req, np.float64)
+        o_pt[live] = pdt_l
+        tra = nh_full * (per_chunk / self._ulink)
+        tra[live] += pdt_l
+        n_still_arr = np.zeros(n_req, np.int64)
+        n_still_arr[live] = still_l
+        stats = {d: st.to_cache_stats() for d, st in states.items()}
+        self.caches = states
+        return dict(nh=nh_full, tra=tra, o_peer=o_peer, o_pt=o_pt,
+                    n_still=n_still_arr, stats=stats,
+                    peer_ranges=peer_ranges)
 
     # -- sequential global sweep (inline peer resolution; always exact) ------
 
@@ -1384,8 +1868,7 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         :class:`_IntervalOrderAmbiguity` when an eviction split event is
         order-sensitive."""
         n_req = P["n_req"]
-        payloads = self._phase_a(P["dtn"], P["zero"], P["obj"], P["base"],
-                                 P["k_eff"], P["pc"])
+        payloads = self._phase_a(P)
         # the per-DTN cache states live (and die) in the shard workers;
         # only their logs/counters come back — drop any stale state a
         # previous run left on this simulator

@@ -269,3 +269,109 @@ class TestStreaming:
         m = MarkovPredictor(grid).fit(reqs)
         nxt = m.predict_next_objs(_mk(100.0, obj=0, uid=0), top_n=1)
         assert nxt == [1]   # loc 0 -> loc 1, obj 1 most popular there
+
+
+# ------------------------------------------------- peer-fetch resolution
+
+
+from repro.core.delivery import (PeerFetchRange, coalesce_peer_fetches,
+                                 select_peer_sources)
+
+
+def _ref_peer_choice(bw_to_dtn, holders):
+    """Brute-force §IV-D spec: iterate DTNs ascending keeping strict
+    bandwidth improvements (so ties resolve to the lowest DTN id), accept
+    iff the winning peer link strictly beats the origin link."""
+    n = holders.shape[1]
+    src = np.zeros(n, np.int64)
+    acc = np.zeros(n, np.bool_)
+    for c in range(n):
+        best, best_bw = 0, 0.0
+        for d in range(holders.shape[0]):
+            if holders[d, c] and bw_to_dtn[d] > best_bw:
+                best, best_bw = d, bw_to_dtn[d]
+        src[c] = best
+        acc[c] = best_bw > 0.0 and bw_to_dtn[best] > bw_to_dtn[0]
+    return src, acc
+
+
+def _chunk_decisions(draw_rows):
+    """Normalize drawn rows into the (req_pos, keys, src) arrays the replay
+    engines hand to ``coalesce_peer_fetches``: req_pos non-decreasing, keys
+    strictly increasing within a request, src per chunk."""
+    rows = sorted(set(draw_rows))
+    req = np.array([r for r, _, _ in rows], np.int64)
+    keys = np.array([k for _, k, _ in rows], np.int64)
+    src = np.array([s for _, _, s in rows], np.int64)
+    return req, keys, src
+
+
+class TestPeerResolution:
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 40),
+                              st.integers(1, 3)),
+                    min_size=1, max_size=80))
+    @settings(max_examples=80, deadline=None)
+    def test_property_coalesce_covers_and_merges(self, rows):
+        req, keys, src = _chunk_decisions(rows)
+        out = coalesce_peer_fetches(req, keys, src, dtn=4)
+        # exact cover: every input chunk in exactly one range, nothing else
+        got = sorted((r.req_pos, k, r.src)
+                     for r in out for k in range(r.key_lo, r.key_hi))
+        assert got == sorted(zip(req.tolist(), keys.tolist(), src.tolist()))
+        assert all(r.key_lo < r.key_hi and r.dtn == 4 for r in out)
+        # maximality: no two emitted ranges are still mergeable
+        for a, b in zip(out, out[1:]):
+            assert not (a.req_pos == b.req_pos and a.src == b.src
+                        and a.key_hi == b.key_lo)
+
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 40),
+                              st.integers(1, 3)),
+                    min_size=1, max_size=80))
+    @settings(max_examples=80, deadline=None)
+    def test_property_coalesce_idempotent(self, rows):
+        req, keys, src = _chunk_decisions(rows)
+        out = coalesce_peer_fetches(req, keys, src, dtn=2)
+        # re-expanding the ranges and re-coalescing is a fixed point
+        req2 = np.array([r.req_pos for r in out
+                         for _ in range(r.key_lo, r.key_hi)], np.int64)
+        keys2 = np.array([k for r in out
+                          for k in range(r.key_lo, r.key_hi)], np.int64)
+        src2 = np.array([r.src for r in out
+                         for _ in range(r.key_lo, r.key_hi)], np.int64)
+        assert coalesce_peer_fetches(req2, keys2, src2, dtn=2) == out
+
+    @given(st.integers(0, 2**64 - 1))
+    @settings(max_examples=120, deadline=None)
+    def test_property_select_peer_sources_matches_reference(self, s):
+        rng = np.random.default_rng(s)
+        n_dtn, n_chunks = 7, int(rng.integers(1, 24))
+        # coarse bandwidth levels force frequent exact ties (§IV-D
+        # tie-break: max bandwidth, lowest DTN id) and dead links
+        bw = rng.choice([0.0, 2.0, 8.0, 8.0, 25.0], size=n_dtn)
+        holders = rng.random((n_dtn, n_chunks)) < 0.4
+        holders[0] = False                # caller clears origin + self rows
+        holders[3] = False
+        src, acc = select_peer_sources(bw, holders)
+        ref_src, ref_acc = _ref_peer_choice(bw, holders)
+        np.testing.assert_array_equal(acc, ref_acc)
+        # src is only meaningful where accepted
+        np.testing.assert_array_equal(src[acc], ref_src[acc])
+
+    def test_select_peer_sources_tiebreak_lowest_id(self):
+        # two peers at identical bandwidth hold the same chunk: the lower
+        # DTN id must win (reference iterates ascending keeping strict
+        # improvements only)
+        bw = np.array([8.0, 25.0, 25.0, 0.0])
+        holders = np.zeros((4, 1), np.bool_)
+        holders[1, 0] = holders[2, 0] = True
+        src, acc = select_peer_sources(bw, holders)
+        assert acc[0] and src[0] == 1
+
+    def test_select_peer_sources_origin_tie_rejected(self):
+        # a peer exactly matching the origin link is NOT accepted (strict
+        # improvement required by §IV-D)
+        bw = np.array([25.0, 25.0, 8.0])
+        holders = np.zeros((3, 1), np.bool_)
+        holders[1, 0] = True
+        _, acc = select_peer_sources(bw, holders)
+        assert not acc[0]
