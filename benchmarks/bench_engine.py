@@ -244,6 +244,23 @@ def main() -> None:
         print(f"FAIL: counter mismatch in {', '.join(mismatched)}",
               file=sys.stderr)
         sys.exit(1)
+    # serving-path floor: the flat interval state exists to make the fused
+    # block-over-intervals path competitive on coarse chunks, so the smoke
+    # run fails if that row falls clearly behind the vector engine (the
+    # 0.9 factor is grace for single-rep timing noise)
+    if (args.smoke and "reference" in engines and "interval" in engines
+            and "vector" in engines):
+        coarse = [r for r in rows
+                  if r["serving"] and r["chunk_seconds"] >= 3600.0
+                  and r["cache_gb"] >= 64]
+        floor_bad = [f"{r['trace']}@{int(r['chunk_seconds'])}s"
+                     for r in coarse
+                     if r["speedup_interval"] < 0.9 * r["speedup_vector"]]
+        if floor_bad:
+            print("FAIL: fused interval path fell below the vector engine "
+                  f"on coarse-chunk rows: {', '.join(floor_bad)}",
+                  file=sys.stderr)
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ from repro.core.cache import (IntervalLRUState, IntLFUState, IntLRUState,
                               chunks_for_range, make_cache,
                               make_int_cache_state)
 from repro.core.engine import IntervalVDCSimulator, VectorVDCSimulator
+from repro.core.interval_store import FlatIntervalState
 from repro.core.classify import (classify_request_type, classify_users,
                                  fresh_duplicate_bytes, summarize_trace)
 from repro.core.delivery import (HPMAdapter, MD1Adapter, MD2Adapter,

@@ -462,7 +462,7 @@ class IntLRUState(IntCacheState):
                 stop = int(np.argmax(amb))
                 kk = kk[:stop]
                 val = val[:stop]
-            vi = np.nonzero(val)[0]
+            vi = val.nonzero()[0]
             if len(vi):
                 keys_v = kk[vi]
                 vk_parts.append(keys_v)
@@ -476,7 +476,7 @@ class IntLRUState(IntCacheState):
             z = np.empty(0, np.int64)
             return z, z, z
         vk = np.concatenate(vk_parts)
-        cum = np.cumsum(np.concatenate(sz_parts))
+        cum = np.concatenate(sz_parts).cumsum()
         ends = np.concatenate(end_parts)
         return vk, cum, ends
 
@@ -1060,12 +1060,16 @@ class IntervalLRUState:
                          blocked_ends: list) -> int:
         """Dry-run the eviction scan: bytes freeable in exact LRU order
         before the first victim chunk inside a *blocked* run (sorted
-        disjoint key runs), capped at ``max_need``.  Pure — walks the FIFO
-        and both maps without mutating them.  The fused block replay uses
-        the result to truncate a block so that its committed inserts can
-        never evict a key the block itself references (which keeps the
-        block-start snapshot valid for every in-block hit, dup and peer
-        decision)."""
+        disjoint key runs), clamped at ``max_need`` — the last scanned run
+        is consumed whole, so without the clamp the tally could overshoot
+        the cap mid-run and leak scan-order detail into the result.  Pure —
+        walks the FIFO and both maps without mutating them.  The fused
+        block replay uses the result to truncate a block so that its
+        committed inserts can never evict a key the block itself references
+        (which keeps the block-start snapshot valid for every in-block hit,
+        dup and peer decision); it only ever compares the result against
+        the shortfall ``max_need``, so the clamp is contract-neutral at
+        that call site."""
         freed = 0
         nb = len(blocked_starts)
         for rec in self._fifo:
@@ -1089,7 +1093,7 @@ class IntervalLRUState:
                     p = pe
                     zi += 1
                 if freed >= max_need:
-                    return freed
+                    return max_need            # clamp the mid-run overshoot
                 if stop < e:
                     return freed               # rest of this run blocked
         return freed

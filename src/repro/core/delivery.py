@@ -229,8 +229,12 @@ def select_peer_sources_ranges(bw_col: np.ndarray, holders: np.ndarray
     ``bw_col[s, c]`` is the link bandwidth from DTN ``s`` into run ``c``'s
     requesting DTN (column ``bw[:, dtn_of_run]`` of the link matrix, so row
     0 is each run's origin link); ``holders[s, c]`` says whether DTN ``s``
-    holds run ``c`` in full at the run's serve time.  The caller must
-    already have cleared the origin row and each run's own-DTN entry.
+    holds run ``c`` in full at the run's serve time — the engine derives it
+    from each cache's block-start presence snapshot (``coverage_arrays``;
+    on :class:`repro.core.interval_store.FlatIntervalState` these are live
+    zero-copy views of the size-map columns) plus in-block first-toucher
+    attribution.  The caller must already have cleared the origin row and
+    each run's own-DTN entry.
 
     Returns ``(src, best_bw, accepted)`` under the reference's §IV-D rule:
     iterate candidate DTNs ascending keeping strict bandwidth improvements

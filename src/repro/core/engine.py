@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.cache import (CacheStats, IntervalLRUState, chunk_bytes,
                               chunk_bounds_bulk, make_int_cache_state)
+from repro.core.interval_store import FlatIntervalState
 from repro.core.delivery import (PeerFetchRange, coalesce_peer_fetches,
                                  coalesce_peer_ranges,
                                  select_peer_sources,
@@ -348,11 +349,11 @@ class VectorVDCSimulator:
                 continue
             j = min(i + block, n_req)
             kb = k_a[i:j]
-            cum = np.cumsum(kb)
+            cum = kb.cumsum()
             ktot = int(cum[-1]) if len(cum) else 0
             if ktot > (1 << 22):
                 # cap block chunk positions (rank encoding + memory)
-                j = i + max(1, int(np.searchsorted(cum, 1 << 22)))
+                j = i + max(1, int(cum.searchsorted(1 << 22)))
                 kb = kb[:j - i]
                 cum = cum[:j - i]
                 ktot = int(cum[-1])
@@ -362,9 +363,9 @@ class VectorVDCSimulator:
                 continue
             starts = cum - kb
             kdt = self._flat_dt
-            req_rep = np.repeat(self._req32[i:j], kb)
+            req_rep = self._req32[i:j].repeat(kb)
             keys = (np.arange(ktot, dtype=kdt)
-                    + np.repeat(self._base_k[i:j] - starts.astype(kdt), kb))
+                    + (self._base_k[i:j] - starts.astype(kdt)).repeat(kb))
             dtns = self._dtn32[req_rep]
             flat = dtns.astype(kdt, copy=False) * kdt(n_keys) + keys
             h0 = self._present_flat[flat]
@@ -372,7 +373,7 @@ class VectorVDCSimulator:
             # argsort groups equal flat ids into runs; the first position of
             # each run is the first occurrence (commit reuses the same sort
             # for last occurrences / unique records).
-            order_f = np.argsort(flat, kind="stable")
+            order_f = flat.argsort(kind="stable")
             sf = flat[order_f]
             newrun = np.empty(ktot, np.bool_)
             newrun[0] = True
@@ -390,7 +391,7 @@ class VectorVDCSimulator:
                 # decisions would change): plan victims per cache against
                 # the block key set, truncating at the first insert that
                 # cannot be satisfied with unreferenced victims.
-                ins_pos = np.nonzero(ins)[0]
+                ins_pos = ins.nonzero()[0]
                 ins_d = dtns[ins_pos]
                 ins_bytes = pc_a[req_rep[ins_pos]]
                 blocked_keys = keys
@@ -400,7 +401,7 @@ class VectorVDCSimulator:
                     if not dm.any():
                         continue
                     d_pos = ins_pos[dm]
-                    cum_ins = np.cumsum(ins_bytes[dm])
+                    cum_ins = ins_bytes[dm].cumsum()
                     room = cache.capacity - cache.used
                     total = int(cum_ins[-1])
                     if total <= room:
@@ -426,13 +427,13 @@ class VectorVDCSimulator:
             if b > i:
                 p_end = ktot if b == j else int(starts[b - i])
                 for cache, d_pos, cum_ins, room, vk, cumf, ends in ev_plans:
-                    nin = int(np.searchsorted(d_pos, p_end))
+                    nin = int(d_pos.searchsorted(p_end))
                     if nin == 0:
                         continue
                     need = int(cum_ins[nin - 1]) - room
                     if need <= 0:
                         continue
-                    n_ev = int(np.searchsorted(cumf, need)) + 1
+                    n_ev = int(cumf.searchsorted(need)) + 1
                     cache.apply_evictions(vk, cumf, ends, n_ev)
                 self._block_commit(
                     i, b, p_end, req_rep, keys, dtns, flat, true_hit,
@@ -460,7 +461,7 @@ class VectorVDCSimulator:
         rel = req_rep[:P] - np.int32(i)
         R = b - i
         pc_a = self._pc_arr
-        ins_pos = np.nonzero(~th)[0]
+        ins_pos = (~th).nonzero()[0]
         m = len(ins_pos)
         acc = np.zeros(m, np.bool_)
         src_bw = None
@@ -474,7 +475,7 @@ class VectorVDCSimulator:
             # request of that DTN inside this block
             cand = self._present2d[:, ik]              # (n_dtn, m) gather
             iflat = flat[ins_pos]                      # unique per (dtn, key)
-            so = np.argsort(iflat)
+            so = iflat.argsort()
             s_flat = iflat[so]
             s_req = ireq[so]
             ar = np.arange(m)
@@ -484,7 +485,7 @@ class VectorVDCSimulator:
             scores = cand * self.bw[:, idn]            # (n_dtn, m)
             for dd in range(1, self.n_dtn):
                 f2 = dd * self._n_keys + ik
-                loc = np.searchsorted(s_flat, f2)
+                loc = s_flat.searchsorted(f2)
                 locc = np.minimum(loc, m - 1)
                 found = (loc < m) & (s_flat[locc] == f2)
                 inb = found & (s_req[locc] < ireq)
@@ -585,10 +586,10 @@ class VectorVDCSimulator:
             mpcs_d = np.bincount(idn_all, weights=ipc,
                                  minlength=self.n_dtn)
         for d, cache in self.caches.items():
-            s0, s1 = np.searchsorted(u_dtn, (d, d + 1))
+            s0, s1 = u_dtn.searchsorted((d, d + 1))
             if s1 > s0:
                 sl = slice(int(s0), int(s1))
-                o2 = np.argsort(u_rank[sl])
+                o2 = u_rank[sl].argsort()
                 cache.commit_unique(u_keys[sl][o2], u_rank[sl][o2],
                                     u_ins[sl][o2], u_sz[sl][o2], rank_span)
             nm_d = int(mcnt_d[d]) if m else 0
@@ -713,7 +714,7 @@ class VectorVDCSimulator:
             seg = self._present2d[dtn, lo:hi]
             nh = int(seg.sum())
             if nh:
-                hit_keys = np.nonzero(seg)[0] + lo
+                hit_keys = seg.nonzero()[0] + lo
                 if track_pref:
                     prow = self._pref2d[dtn]
                     consume = hit_keys[prow[hit_keys] == 1]
@@ -730,7 +731,7 @@ class VectorVDCSimulator:
             cache.record_lookup(nh, kk - nh, pc)
             n_miss = kk - nh
             if n_miss:
-                miss_keys = np.nonzero(~seg)[0] + lo
+                miss_keys = (~seg).nonzero()[0] + lo
         # peer lookup for missing chunks (fetch iff the peer link beats the
         # origin's, same tie-breaking as the reference: lowest DTN id wins)
         if n_miss and self.cfg.enable_peer_cache and self.use_cache:
@@ -1120,9 +1121,9 @@ def _merge_key_runs(lo: np.ndarray,
     typ = np.concatenate((np.ones(n, np.int64), np.full(n, -1, np.int64)))
     # stable: at equal keys the starts (first half) sort ahead of the ends,
     # so touching ranges stay one run
-    order = np.argsort(ev, kind="stable")
+    order = ev.argsort(kind="stable")
     ev = ev[order]
-    depth = np.cumsum(typ[order])
+    depth = typ[order].cumsum()
     prev = np.concatenate(([0], depth[:-1]))
     return ev[(prev == 0) & (depth > 0)], ev[(depth == 0) & (prev > 0)]
 
@@ -1151,6 +1152,9 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
     n_dtn = max(states) + 1
     cap = next(iter(states.values())).capacity
     active = sorted(states)
+    # homogeneous state bank: flat states take the batched array APIs
+    # (plan_evict_clean on key-run arrays, commit_block_arrays)
+    flat = getattr(next(iter(states.values())), "flat", False)
     if not log:
         nh_loc = np.zeros(n, np.int64)
         acc_loc = np.zeros(n, np.int64)
@@ -1231,6 +1235,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             continue
         j = min(n, i + blk)
         was_trunc = False
+        cap_nb = 0
         while True:
             # ---- elementary-cell decomposition of [i, j) ------------------
             B = j - i
@@ -1244,7 +1249,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                 cs, ce = covs[d]
                 if len(cs):
                     # keep only segments overlapping the block's key union
-                    u_idx = np.searchsorted(ue, cs, side="right")
+                    u_idx = ue.searchsorted(cs, side="right")
                     ok = u_idx < len(us)
                     ov = np.zeros(len(cs), bool)
                     ov[ok] = us[u_idx[ok]] < ce[ok]
@@ -1252,57 +1257,54 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                         pts.append(cs[ov])
                         pts.append(ce[ov])
             C = np.unique(np.concatenate(pts))
-            rs = np.searchsorted(C, lo)
-            re_ = np.searchsorted(C, hi)
+            rs = C.searchsorted(lo)
+            re_ = C.searchsorted(hi)
             cnt = re_ - rs
-            cum = np.cumsum(cnt)
+            cum = cnt.cumsum()
             if int(cum[-1]) > _FUSED_MAX_INCIDENCE and B > 1:
-                nb = max(1, int(np.searchsorted(
-                    cum, _FUSED_MAX_INCIDENCE, side="right")))
+                nb = max(1, int(cum.searchsorted(
+                    _FUSED_MAX_INCIDENCE, side="right")))
                 if nb < B:
                     j = i + nb
+                    cap_nb = nb
                     continue
             I = int(cum[-1])
             M = len(C) - 1
-            cell_len = np.diff(C)
-            inc = np.repeat(np.arange(B), cnt)
-            cell = np.arange(I) - np.repeat(cum - cnt - rs, cnt)
+            cell_len = C[1:] - C[:-1]
+            inc = np.arange(B).repeat(cnt)
+            cell = np.arange(I) - (cum - cnt - rs).repeat(cnt)
             # ---- snapshot presence + first/last attribution ---------------
             clo = C[:-1]
             snap = np.zeros((n_dtn, M), bool)
             for d in active:
                 cs, ce = covs[d]
                 if len(cs):
-                    ix = np.searchsorted(cs, clo, side="right") - 1
+                    ix = cs.searchsorted(clo, side="right") - 1
                     ok = ix >= 0
                     snap[d, ok] = ce[ix[ok]] > clo[ok]
             first2 = np.full((n_dtn, M), BIG, np.int64)
             last2 = np.full((n_dtn, M), -1, np.int64)
             d_inc = dt_b[inc]
+            # ``inc`` ascends, and duplicate fancy-index writes land
+            # last-wins: a forward scatter leaves each (DTN, cell)'s last
+            # toucher, a reversed scatter its first — no per-DTN sort.
+            # The reversed index arrays must be materialized: setitem walks
+            # index arrays in memory order, and a negative-stride view
+            # would silently restore the forward write order.
+            last2[d_inc, cell] = inc
+            first2[np.ascontiguousarray(d_inc[::-1]),
+                   np.ascontiguousarray(cell[::-1])] = (
+                       np.ascontiguousarray(inc[::-1]))
             duniq: dict[int, tuple] = {}
             for d in active:
-                sub = np.nonzero(d_inc == d)[0]
-                if not len(sub):
-                    continue
-                cd = cell[sub]
-                idv = inc[sub]                # ascending within each cell
-                order = np.argsort(cd, kind="stable")
-                sc = cd[order]
-                si = idv[order]
-                head = np.empty(len(sc), bool)
-                head[0] = True
-                head[1:] = sc[1:] != sc[:-1]
-                tail = np.empty(len(sc), bool)
-                tail[-1] = True
-                tail[:-1] = head[1:]
-                uc, fi, la = sc[head], si[head], si[tail]
-                duniq[d] = (uc, fi, la)
-                first2[d, uc] = fi
-                last2[d, uc] = la
+                row = last2[d]
+                uc = (row >= 0).nonzero()[0]  # ascending touched cells
+                if len(uc):
+                    duniq[d] = (uc, first2[d, uc], row[uc])
             snap_inc = snap[d_inc, cell]
             first_inc = first2[d_inc, cell]
             hit = snap_inc | (first_inc < inc)
-            ins_idx = np.nonzero(~hit)[0]     # first-touch absent cells
+            ins_idx = (~hit).nonzero()[0]     # first-touch absent cells
             ins_inc = inc[ins_idx]
             ins_cell = cell[ins_idx]
             ins_d = d_inc[ins_idx]
@@ -1310,32 +1312,37 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             ins_bytes = ins_len * pc_b[ins_inc]
             # ---- eviction planning + block truncation ---------------------
             b_trunc = B
-            over_big = np.nonzero(pc_b > cap)[0]
+            over_big = (pc_b > cap).nonzero()[0]
             if len(over_big):
                 # the reference silently skips oversized inserts; serve the
                 # request scalarly so later touches of its keys stay misses
                 b_trunc = int(over_big[0])
             evict_plan: dict[int, tuple] = {}
             if b_trunc:
-                bs_l = us.tolist()
-                be_l = ue.tolist()
+                # the flat state takes the blocked key runs as arrays; the
+                # list state wants Python lists (bisect)
+                bs_l = (us, ue) if flat else (us.tolist(), ue.tolist())
                 for d in active:
                     m_ = ins_d == d
                     if not m_.any():
                         continue
                     st = states[d]
-                    bb = np.zeros(B, np.int64)
-                    np.add.at(bb, ins_inc[m_], ins_bytes[m_])
-                    cum_d = np.cumsum(bb)
+                    bb = np.bincount(ins_inc[m_], weights=ins_bytes[m_],
+                                     minlength=B).astype(np.int64)
+                    cum_d = bb.cumsum()
                     room = st.capacity - st.used
                     total = int(cum_d[-1])
                     if total <= room:
                         continue
-                    clean = st.plan_evict_clean(total - room, bs_l, be_l)
+                    # contract: the result is only compared against the
+                    # byte shortfall (total - room) and clamped there —
+                    # plan_evict_clean may cap its answer at max_need, and
+                    # any overshoot past it must never change b_trunc
+                    clean = st.plan_evict_clean(total - room, *bs_l)
                     evict_plan[d] = (bb, cum_d)
                     if total > room + clean:
-                        b_trunc = min(b_trunc, int(np.searchsorted(
-                            cum_d, room + clean, side="right")))
+                        b_trunc = min(b_trunc, int(cum_d.searchsorted(
+                            room + clean, side="right")))
             if b_trunc < B:
                 was_trunc = True
                 if b_trunc == 0:
@@ -1368,7 +1375,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             acc2 = np.zeros((n_dtn, M), bool)
             acc2[ins_d[acc], ins_cell[acc]] = True
         # ---- per-request / per-DTN accounting -----------------------------
-        hit_i = np.nonzero(hit)[0]
+        hit_i = hit.nonzero()[0]
         hlen = cell_len[cell[hit_i]]
         nh_b = np.bincount(inc[hit_i], weights=hlen,
                            minlength=B).astype(np.int64)
@@ -1403,10 +1410,21 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
         for d, (bb, cum_d) in evict_plan.items():
             st = states[d]
             ev = st._evict_until
-            for r_loc in np.nonzero(bb)[0].tolist():
-                cv = int(cum_d[r_loc])
+            if log:
+                # per-request calls: the evict/split logs need each
+                # eviction stamped with its triggering request
+                for r_loc in bb.nonzero()[0].tolist():
+                    cv = int(cum_d[r_loc])
+                    if st.used + cv > st.capacity:
+                        ev(cv, int(pos_a[i + r_loc]))
+            else:
+                # one call with the block's final cumulative need: LRU
+                # prefix consumption is monotone, so evicting for the
+                # per-request cumulative values in sequence lands on the
+                # same final prefix (and t_now is unread outside log mode)
+                cv = int(cum_d[-1])
                 if st.used + cv > st.capacity:
-                    ev(cv, int(pos_a[i + r_loc]))
+                    ev(cv, int(pos_a[j - 1]))
         # ---- run-merge commits --------------------------------------------
         for d in active:
             got = duniq.get(d)
@@ -1416,6 +1434,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             st = states[d]
             ins_flag = ~snap[d, uc]           # first touch was a miss
             size_recs: list = []
+            z_parts = None
             if ins_flag.any():
                 iuc = uc[ins_flag]
                 ifi = fi[ins_flag]
@@ -1438,12 +1457,18 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                     iob = obj_a[i + ifi]
                     brk[1:] = ((ipc[1:] != ipc[:-1]) | (iob[1:] != iob[:-1])
                                | (iuc[1:] != iuc[:-1] + 1))
-                gs = np.nonzero(brk)[0]
+                gs = brk.nonzero()[0]
                 ge = np.append(gs[1:], len(iuc)) - 1
-                size_recs = list(zip(
-                    obj_a[i + ifi[gs]].tolist(), C[iuc[gs]].tolist(),
-                    C[iuc[ge] + 1].tolist(), pos_a[i + ifi[gs]].tolist(),
-                    pc_b[ifi[gs]].tolist()))
+                if flat:
+                    # hand the column arrays straight to the flat state
+                    z_parts = (obj_a[i + ifi[gs]], C[iuc[gs]],
+                               C[iuc[ge] + 1], pos_a[i + ifi[gs]],
+                               pc_b[ifi[gs]])
+                else:
+                    size_recs = list(zip(
+                        obj_a[i + ifi[gs]].tolist(), C[iuc[gs]].tolist(),
+                        C[iuc[ge] + 1].tolist(), pos_a[i + ifi[gs]].tolist(),
+                        pc_b[ifi[gs]].tolist()))
             # final recency order: (last toucher, hit/peer/origin phase,
             # ascending key) — single-touch inserts carry their phase, every
             # re-touched cell ends as a plain hit touch of its last toucher
@@ -1472,12 +1497,19 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                 # FIFOs make every later eviction scan cheaper.
                 ob3 = obj_a[i + la3]
                 brk[1:] = (uc3[1:] != uc3[:-1] + 1) | (ob3[1:] != ob3[:-1])
-            gs = np.nonzero(brk)[0]
+            gs = brk.nonzero()[0]
             ge = np.append(gs[1:], len(uc3)) - 1
-            rec_recs = list(zip(
-                obj_a[i + la3[gs]].tolist(), C[uc3[gs]].tolist(),
-                C[uc3[ge] + 1].tolist(), sr3[gs].tolist()))
-            st.commit_block(size_recs, rec_recs)
+            if flat:
+                if z_parts is None:
+                    e_ = np.empty(0, np.int64)
+                    z_parts = (e_, e_, e_, e_, e_)
+                st.commit_block_arrays(*z_parts, obj_a[i + la3[gs]],
+                                       C[uc3[gs]], C[uc3[ge] + 1], sr3[gs])
+            else:
+                rec_recs = list(zip(
+                    obj_a[i + la3[gs]].tolist(), C[uc3[gs]].tolist(),
+                    C[uc3[ge] + 1].tolist(), sr3[gs].tolist()))
+                st.commit_block(size_recs, rec_recs)
         i = j
         if was_trunc:
             # the blocker request is served scalarly right away (exact for
@@ -1489,18 +1521,26 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             blk = max(256, blk >> 1)
         else:
             degen = 0
-            blk = min(blk << 1, 65536)
+            if cap_nb:
+                # the incidence cap cut this block down from ``blk``; size
+                # the next block near the achieved cut so its first
+                # decomposition pass is not paid at many times the kept size
+                blk = max(256, min(65536, cap_nb + (cap_nb >> 2)))
+            else:
+                blk = min(blk << 1, 65536)
     if log:
         return None
     return nh_loc, acc_loc, pdt_loc, still_loc, peer_ranges
 
 
 def _interval_replay_payload(capacity: int, idx: list, obj: list, lo: list,
-                             kk: list, pc: list, fused: bool = False) -> dict:
+                             kk: list, pc: list, fused: bool = False,
+                             flat: bool = False) -> dict:
     """Phase A for one DTN: replay its request subsequence through an
-    :class:`IntervalLRUState` and package the logs for phase B — request by
-    request, or through the fused block path in the coarse regime."""
-    st = IntervalLRUState(capacity)
+    :class:`IntervalLRUState` (or :class:`FlatIntervalState` when ``flat``)
+    and package the logs for phase B — request by request, or through the
+    fused block path in the coarse regime."""
+    st = FlatIntervalState(capacity) if flat else IntervalLRUState(capacity)
     if fused:
         n = len(idx)
         lo_a = np.asarray(lo, np.int64)
@@ -1530,10 +1570,11 @@ def _interval_replay_payload(capacity: int, idx: list, obj: list, lo: list,
 
 
 def _interval_worker_main(conn, capacity: int, jobs: list,
-                          fused: bool = False) -> None:
+                          fused: bool = False, flat: bool = False) -> None:
     """Forked shard worker: replay a bin of DTNs, ship payloads back."""
     try:
-        out = {d: _interval_replay_payload(capacity, *job, fused=fused)
+        out = {d: _interval_replay_payload(capacity, *job, fused=fused,
+                                           flat=flat)
                for d, job in jobs}
         conn.send((True, out))
     except BaseException as e:          # surfaced in the driver
@@ -1618,6 +1659,10 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         # fused block path; in the fine regime the per-request interval
         # sweep already wins (segment-bound, not chunk-bound)
         fused = P["mean_k"] < self.SWEEP_MIN_CHUNKS_PER_REQ
+        # the flat state only batches the fused block APIs; the per-request
+        # sweep regime stays on the list state (segment-bound splices win
+        # there — see docs/ARCHITECTURE.md)
+        flat = fused and self.cfg.interval_flat_state
         jobs: dict[int, tuple] = {}
         loads: list[tuple[int, int]] = []
         for d in range(1, self.n_dtn):
@@ -1630,11 +1675,15 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         cap = self.cfg.cache_bytes
         n_workers = self._resolve_workers(len(jobs))
         if n_workers <= 1:
-            return {d: _interval_replay_payload(cap, *jobs[d], fused=fused)
+            return {d: _interval_replay_payload(cap, *jobs[d], fused=fused,
+                                                flat=flat)
                     for d in jobs}
         # greedy bin-packing by request count; the driver replays the
-        # heaviest bin itself while forked workers handle the rest
-        loads.sort(reverse=True)
+        # heaviest bin itself while forked workers handle the rest.
+        # Deterministic tie-breaks everywhere (equal loads sort by DTN id,
+        # equal bins by their smallest DTN id) so repeated runs pack — and
+        # therefore replay — identically
+        loads.sort(key=lambda t: (-t[0], t[1]))
         bins: list[list[int]] = [[] for _ in range(n_workers)]
         totals = [0] * n_workers
         for load, d in loads:
@@ -1642,23 +1691,25 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             bins[i].append(d)
             totals[i] += load
         bins = [b for b in bins if b]
-        bins.sort(key=lambda b: -sum(len(jobs[d][0]) for d in b))
+        bins.sort(key=lambda b: (-sum(len(jobs[d][0]) for d in b), min(b)))
         try:
             ctx = multiprocessing.get_context("fork")
         except ValueError:                       # no fork on this platform
-            return {d: _interval_replay_payload(cap, *jobs[d], fused=fused)
+            return {d: _interval_replay_payload(cap, *jobs[d], fused=fused,
+                                                flat=flat)
                     for d in jobs}
         procs = []
         for b in bins[1:]:
             parent_conn, child_conn = ctx.Pipe(duplex=False)
             p = ctx.Process(target=_interval_worker_main,
                             args=(child_conn, cap,
-                                  [(d, jobs[d]) for d in b], fused),
+                                  [(d, jobs[d]) for d in b], fused, flat),
                             daemon=True)
             p.start()
             child_conn.close()
             procs.append((p, parent_conn))
-        payloads = {d: _interval_replay_payload(cap, *jobs[d], fused=fused)
+        payloads = {d: _interval_replay_payload(cap, *jobs[d], fused=fused,
+                                                flat=flat)
                     for d in bins[0]}
         for p, conn in procs:
             ok, out = conn.recv()
@@ -1728,7 +1779,9 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         live = np.nonzero(~P["zero"])[0]
         lo_a = P["base"][live]
         cap = cfg.cache_bytes
-        states = {d: IntervalLRUState(cap, log_events=False)
+        cls = (FlatIntervalState if cfg.interval_flat_state
+               else IntervalLRUState)
+        states = {d: cls(cap, log_events=False)
                   for d in range(1, self.n_dtn)}
         nh_l, acc_l, pdt_l, still_l, peer_ranges = _fused_block_replay(
             states, self.bw, cfg.enable_peer_cache, False,

@@ -110,6 +110,14 @@ class SimConfig:
     # requests on one DTN) caps its parallel gain.  Other engines ignore
     # this knob.
     interval_shards: int | None = None
+    # Interval engine only, execution knob (never changes results): back
+    # the fused block replay's caches with the flat array-backed
+    # ``FlatIntervalState`` (batched commit/evict kernels) instead of the
+    # Python-list ``IntervalLRUState``.  The fine-chunking sweep regime
+    # always stays list-backed — its per-request splices are segment-bound
+    # and already cheap there.  Set False to pin the list state everywhere
+    # (differential testing, perf comparison).
+    interval_flat_state: bool = True
 
     def calibrate_origin(self, requests: Sequence["Request"],
                          target_utilization: float = 0.2) -> "SimConfig":

@@ -58,7 +58,8 @@ def _int_counters(res):
     }
 
 
-_ENGINE_ONLY_KNOBS = ("interval_shards", "batched_prediction")
+_ENGINE_ONLY_KNOBS = ("interval_shards", "batched_prediction",
+                      "interval_flat_state")
 
 
 def _ref_run(trace, splits, strategy, **cfg_kw):
@@ -117,6 +118,31 @@ def test_interval_engine_agrees(trace, shards, splits):
     ref, ivl = _run_both(trace, splits, "cache_only", engine="interval",
                          interval_shards=shards)
     _assert_equivalent(ref, ivl)
+
+
+@pytest.mark.parametrize("trace", ["ooi", "gage"])
+def test_sharded_driver_deterministic_shards3(trace, splits):
+    """Phase A packs DTN subsequences into shards largest-first with the
+    ``(-total, dtn_id)`` tie-break, so a repeated run at
+    ``interval_shards=3`` must reproduce counters bit-for-bit (and match
+    the reference) — no set/dict iteration order may leak into packing."""
+    ref, a = _run_both(trace, splits, "cache_only", engine="interval",
+                       interval_shards=3)
+    _, b = _run_both(trace, splits, "cache_only", engine="interval",
+                     interval_shards=3)
+    assert _int_counters(a) == _int_counters(b) == _int_counters(ref)
+
+
+@pytest.mark.parametrize("trace", ["ooi", "gage"])
+def test_flat_and_list_state_agree(trace, splits):
+    """The flat array-backed interval state (default) and the Python-list
+    state behind the same API produce identical counters on the seeded
+    traces — the PR 7 zero-behavior-change bar."""
+    _, flat = _run_both(trace, splits, "cache_only", engine="interval",
+                        interval_flat_state=True)
+    _, lst = _run_both(trace, splits, "cache_only", engine="interval",
+                       interval_flat_state=False)
+    assert _int_counters(flat) == _int_counters(lst)
 
 
 @pytest.mark.parametrize("trace", ["ooi", "gage"])

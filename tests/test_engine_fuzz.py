@@ -137,7 +137,11 @@ def gen_scenario(rng: random.Random):
 def check_strategy(strategy, grid, trace, cfg_kw):
     """Replay one scenario through every engine (and, for static LRU
     serving, through every interval route) and compare counters."""
-    runs = [("vector", {}), ("interval", {})]
+    # ``interval_flat_state`` defaults to True, so the plain interval run
+    # already sweeps the flat array-backed store; the False run pins the
+    # Python-list reference store to the same counters (PR 7 bugfix bar)
+    runs = [("vector", {}), ("interval", {}),
+            ("interval", {"interval_flat_state": False})]
     if strategy == "cache_only" and cfg_kw["cache_policy"] == "lru":
         # pin all three interval routes: auto planner (fused block replay /
         # sweep), pinned sequential sweep, sharded driver + split audit

@@ -18,6 +18,7 @@ from repro.core.cache import IntervalLRUState, LRUCache
 from repro.core.delivery import (PeerFetchRange, coalesce_peer_fetches,
                                  select_peer_sources)
 from repro.core.engine import PresenceTimeline
+from repro.core.interval_store import FlatIntervalState
 
 
 def ref_serve(cache: LRUCache, lo: int, hi: int, size: int) -> int:
@@ -258,3 +259,130 @@ def test_select_peer_sources_rules():
     src, acc = select_peer_sources(bw, holders)
     assert acc.tolist() == [True, True, False, False]
     assert src[0] == 2 and src[1] == 4
+
+
+# ---------------------------------------------------------------------------
+# flat array-backed state (PR 7): snapshot freshness, eviction-plan clamp,
+# and randomized flat-vs-list differential coverage
+# ---------------------------------------------------------------------------
+
+
+_STATES = [IntervalLRUState, FlatIntervalState]
+
+
+@pytest.mark.parametrize("cls", _STATES)
+def test_snapshot_fresh_after_eviction(cls):
+    """Evict-then-snapshot regression: ``coverage_arrays`` memoizes the
+    per-object size-run conversion (the list state's ``_zmemo``), and every
+    size-map mutation — insert, eviction, block commit — must invalidate
+    it.  A stale memo here would silently corrupt every later fused block's
+    start-of-block presence snapshot."""
+    st = cls(4, log_events=False)
+    st.serve(0, 0, 0, 4, 1)                   # fill [0, 4) exactly
+    ss, ee = st.coverage_arrays()             # populates the memo
+    assert (ss.tolist(), ee.tolist()) == ([0], [4])
+    # inserting [10, 12) evicts the two oldest chunks of the first record
+    st.serve(1, 0, 10, 12, 1)
+    ss, ee = st.coverage_arrays()
+    assert (ss.tolist(), ee.tolist()) == ([2, 10], [4, 12])
+    assert st.evictions == 2 and st.used == 4
+    # a fused block commit must invalidate too (the commit path bypasses
+    # insert_runs); evict room first so the commit is in-contract
+    st._evict_until(1, 2)
+    st.commit_block([(0, 20, 21, 2, 1)], [(0, 20, 21, 2)])
+    ss, ee = st.coverage_arrays()
+    assert (ss.tolist(), ee.tolist()) == ([3, 10, 20], [4, 12, 21])
+    st.check_invariants()
+
+
+@pytest.mark.parametrize("cls", _STATES)
+def test_plan_evict_clean_clamps_mid_segment(cls):
+    """A presence run whose byte tally crosses ``max_need`` mid-segment is
+    consumed whole by the scan; the result must come back clamped at
+    ``max_need`` — never the overshot run total.  The fused-replay call
+    site only ever compares the result against the shortfall, so the clamp
+    is contract-neutral there (see ``plan_evict_clean``'s docstring)."""
+    st = cls(1000, log_events=False)
+    st.serve(0, 0, 0, 10, 4)                  # one 10-chunk size-4 record
+    # need lands mid-run (10 bytes = 2.5 chunks into a 40-byte run)
+    assert st.plan_evict_clean(10, [], []) == 10
+    # a blocked run inside the segment truncates the scan at its start
+    assert st.plan_evict_clean(1000, [4], [6]) == 16
+    # unblocked and unclamped: the whole record's bytes
+    assert st.plan_evict_clean(1000, [], []) == 40
+
+
+def _state_digest(st):
+    return dict(hits=st.hits, misses=st.misses, hit_bytes=st.hit_bytes,
+                miss_bytes=st.miss_bytes, evictions=st.evictions,
+                inserted_bytes=st.inserted_bytes, used=st.used,
+                n_live=st.n_live, iv=st.intervals(),
+                miss_log=list(st.miss_log), insert_log=list(st.insert_log),
+                evict_log=list(st.evict_log), split_log=list(st.split_log),
+                obj_hi=dict(st.obj_hi))
+
+
+@pytest.mark.parametrize("seed", range(12))
+@pytest.mark.parametrize("log", [True, False])
+def test_flat_matches_list_randomized(seed, log):
+    """Differential fuzz of FlatIntervalState against IntervalLRUState
+    across the full behavioral API: serve, lookup_touch, coverage queries,
+    fused block commits, eviction plans — digests (counters, intervals,
+    event logs) must agree at every checkpoint."""
+    span = 1 << 20
+    rng = random.Random((20260808, "flat-vs-list", seed, log).__repr__())
+    cap = rng.choice([200, 1000, 5000])
+    a = IntervalLRUState(cap, log_events=log)
+    b = FlatIntervalState(cap, log_events=log)
+    sizes: dict = {}
+    for step in range(130):
+        op = rng.random()
+        obj = rng.randrange(4)
+        size = sizes.setdefault(obj, rng.choice([1, 3, 7, 16]))
+        lo = obj * span + rng.randrange(300)
+        hi = lo + rng.randrange(1, 60)
+        if op < 0.55:
+            assert a.serve(step, obj, lo, hi, size) == \
+                b.serve(step, obj, lo, hi, size)
+        elif op < 0.72:
+            ra = a.lookup_touch(obj, lo, hi, size)
+            rb = b.lookup_touch(obj, lo, hi, size)
+            assert ra[0] == rb[0] and list(ra[1]) == list(rb[1])
+        elif op < 0.82:
+            assert a.coverage_runs(obj, lo, hi) == b.coverage_runs(obj, lo,
+                                                                   hi)
+        elif op < 0.92:
+            # fused-style block commit: disjoint absent runs, in-contract
+            # (the engine evicts ahead of commits)
+            held = set(k for s, e in a.intervals() for k in range(s, e))
+            recs_z, recs_r = [], []
+            pos = obj * span + rng.randrange(400)
+            for _ in range(rng.randrange(1, 4)):
+                w = rng.randrange(1, 20)
+                run = sorted(k for k in range(pos, pos + w)
+                             if k not in held)
+                pos += w + rng.randrange(0, 10)
+                i = 0
+                while i < len(run):
+                    j = i
+                    while j + 1 < len(run) and run[j + 1] == run[j] + 1:
+                        j += 1
+                    recs_z.append((obj, run[i], run[j] + 1, step, size))
+                    recs_r.append((obj, run[i], run[j] + 1, step))
+                    held.update(range(run[i], run[j] + 1))
+                    i = j + 1
+            tot = sum((e0 - s0) * sz for _, s0, e0, _, sz in recs_z)
+            if recs_z and a.used + tot <= cap:
+                a.commit_block(recs_z, recs_r)
+                b.commit_block(recs_z, recs_r)
+        else:
+            mn = rng.randrange(1, cap)
+            bl = sorted(rng.sample(range(obj * span, obj * span + 400), 4))
+            pa = a.plan_evict_clean(mn, [bl[0], bl[2]], [bl[1], bl[3]])
+            pb = b.plan_evict_clean(mn, [bl[0], bl[2]], [bl[1], bl[3]])
+            assert pa == pb
+        if step % 13 == 0:
+            a.check_invariants()
+            b.check_invariants()
+            assert _state_digest(a) == _state_digest(b)
+    assert _state_digest(a) == _state_digest(b)
