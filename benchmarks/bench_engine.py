@@ -11,10 +11,19 @@ counters — the benchmark doubles as an equivalence audit at full scale.
 Writes ``BENCH_engine.json`` at the repo root (schema documented in
 ``docs/BENCHMARKS.md``).
 
+The ``--full-trace`` mode replays a paper-scale synthetic stream (default
+17.9M requests — the OOI trace size) through the windowed streaming path,
+one engine per subprocess (clean per-engine peak-RSS high-water), audits a
+materialized prefix against the windowed run, and merges a ``full_trace``
+row family (``requests`` / ``rps`` / ``peak_rss_mb`` / ``counters_match``)
+into the existing ``BENCH_engine.json`` without re-running the matrix.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_engine.py            # full matrix
     PYTHONPATH=src python benchmarks/bench_engine.py --smoke    # CI quick run
     PYTHONPATH=src python benchmarks/bench_engine.py --engines vector,reference
+    PYTHONPATH=src python benchmarks/bench_engine.py --full-trace
+    PYTHONPATH=src python benchmarks/bench_engine.py --full-trace 1000000
 """
 from __future__ import annotations
 
@@ -25,14 +34,28 @@ import json
 import math
 import os
 import platform
+import subprocess
 import sys
 import time
 
 from repro.core import SimConfig, make_trace, run_strategy
-from repro.core.trace import (GAGE_PROFILE, OOI_PROFILE, TraceGenerator,
+from repro.core.trace import (GAGE_PROFILE, OOI_PROFILE,
+                              StreamingRequestSource,
+                              StreamingTraceSynthesizer, TraceGenerator,
                               TraceProfile)
 
 ENGINES = ("interval", "vector", "reference")
+
+# --full-trace knobs: the user population is sized so the synthesizer's
+# solved duration stays in the months range (dense chunk-key space a few
+# million keys — the regime the vector engine's flat arrays are built for),
+# while program streams still dominate the request count as in the real
+# OOI logs.  All recorded so rows reproduce exactly.
+FULL_TRACE_SEED = 12
+FULL_TRACE_USERS = 20_000
+FULL_TRACE_WINDOW = 131_072
+FULL_TRACE_AUDIT = 200_000
+FULL_TRACE_DEFAULT = 17_900_000       # paper §V-A1: the OOI trace size
 
 # "ooi_rt" stresses the real-time traffic class (paper Table II: 25.7% of
 # OOI volume is real-time polling; here it dominates): many tiny
@@ -97,6 +120,12 @@ SMOKE_SCENARIOS = [
     ("ooi", "cache_only", 3600.0, 1 << 30, 0.08),
     ("gage", "cache_only", 3600.0, 128 << 30, 0.08),
     ("ooi_arima", "hpm", 3600.0, 128 << 30, 0.5),
+    # windowed streaming rows: every engine consumes the trace through a
+    # StreamingRequestSource, and a materialized run joins the counter
+    # audit — any streamed-vs-materialized divergence fails the smoke run
+    # non-zero exactly like an engine divergence
+    ("ooi", "cache_only", 3600.0, 128 << 30, 0.08, 640),
+    ("ooi_arima", "hpm", 3600.0, 128 << 30, 0.5, 640),
 ]
 
 _SPLITS: dict = {}
@@ -119,18 +148,26 @@ def get_split(trace: str, scale: float):
 
 
 def _counters(res) -> tuple:
+    # outcome_totals() folds per-request outcomes for materialized runs and
+    # returns the streamed OutcomeAggregate as-is, so the audit covers the
+    # byte-split integers on both input paths
+    agg = res.outcome_totals()
     return (res.origin_requests, res.prefetch_issued_chunks,
             res.prefetch_used_chunks, res.stream_pushes,
             tuple(sorted((d, s.hits, s.misses, s.evictions,
                           s.inserted_bytes)
-                         for d, s in res.cache_stats.items())))
+                         for d, s in res.cache_stats.items())),
+            agg.n, agg.bytes, agg.local_bytes, agg.prefetched_bytes,
+            agg.peer_bytes, agg.origin_bytes)
 
 
 def run_scenario(trace: str, strategy: str, chunk_seconds: float,
-                 cache_bytes: int, scale: float, engines: list[str],
-                 reps: int) -> dict:
+                 cache_bytes: int, scale: float, window: int | None = None,
+                 engines: list[str] = (), reps: int = 1) -> dict:
     profile = PROFILES[trace]
     train, test = get_split(trace, scale)
+    requests = (StreamingRequestSource.from_requests(test, window=window)
+                if window else test)
     best: dict[str, float] = {e: float("inf") for e in engines}
     counters: dict[str, tuple] = {}
     for _ in range(reps):
@@ -142,26 +179,41 @@ def run_scenario(trace: str, strategy: str, chunk_seconds: float,
                 chunk_seconds=chunk_seconds,
             ).calibrate_origin(test)
             t0 = time.perf_counter()
-            res = run_strategy(strategy, test, profile.grid, cfg, train,
+            res = run_strategy(strategy, requests, profile.grid, cfg, train,
                                engine=engine)
             best[engine] = min(best[engine], time.perf_counter() - t0)
             counters[engine] = _counters(res)
-    if "reference" in engines:
-        for e in engines:
-            if counters[e] != counters["reference"]:
+    if window:
+        # windowed rows additionally audit against a materialized run (the
+        # streaming==materialized contract, tests/test_streaming_replay.py)
+        cfg = SimConfig(
+            stream_rate_bytes_per_s=profile.bytes_per_second_stream,
+            cache_bytes=cache_bytes,
+            chunk_seconds=chunk_seconds,
+        ).calibrate_origin(test)
+        res = run_strategy(strategy, test, profile.grid, cfg, train,
+                           engine=engines[0])
+        counters["materialized"] = _counters(res)
+    audit_ref = ("reference" if "reference" in engines
+                 else "materialized" if window else None)
+    if audit_ref is not None:
+        for e, c in counters.items():
+            if c != counters[audit_ref]:
                 # record the divergence instead of aborting: the row's
                 # counters_match flag lands in the JSON (and the artifact),
                 # and main() exits non-zero after writing it
                 print(f"ENGINE DIVERGENCE in {trace}/{strategy} "
                       f"(chunk={chunk_seconds}s cache={cache_bytes >> 30}G "
-                      f"scale={scale}): {e}={counters[e]} != "
-                      f"reference={counters['reference']}", file=sys.stderr)
+                      f"scale={scale} window={window}): {e}={c} != "
+                      f"{audit_ref}={counters[audit_ref]}", file=sys.stderr)
     n = len(test)
     row = dict(trace=trace, strategy=strategy, chunk_seconds=chunk_seconds,
                cache_gb=cache_bytes >> 30, trace_scale=scale, n_requests=n,
                serving=strategy == "cache_only",
                counters_match=all(c == counters[engines[0]]
                                   for c in counters.values()))
+    if window:
+        row["window"] = window
     for e in engines:
         row[f"{e}_rps"] = round(n / best[e], 1)
         row[f"{e}_seconds"] = round(best[e], 3)
@@ -179,6 +231,85 @@ def _geomean(vals: list[float]) -> float:
     return round(math.prod(vals) ** (1.0 / len(vals)), 2) if vals else 0.0
 
 
+# ---------------------------------------------------------------------------
+# --full-trace: paper-scale streamed replay (one engine per subprocess)
+# ---------------------------------------------------------------------------
+
+
+def _full_trace_worker(engine: str, n_requests: int) -> None:
+    """Subprocess body for one ``--full-trace`` row.
+
+    The timed windowed replay runs first so ``ru_maxrss`` is this engine's
+    high-water mark alone (generation + replay, nothing materialized); the
+    prefix audit afterwards replays the first ``FULL_TRACE_AUDIT`` requests
+    both materialized and windowed on the same engine and config, pinning
+    the streaming==materialized counter contract at this scale."""
+    import resource
+
+    profile = OOI_PROFILE
+    synth = StreamingTraceSynthesizer(profile, seed=FULL_TRACE_SEED,
+                                      n_requests=n_requests,
+                                      n_users=FULL_TRACE_USERS)
+    # calibrate the origin-queue service rate from a prefix, then drop the
+    # materialized requests so they do not count against the peak
+    cal = synth.materialize(FULL_TRACE_AUDIT)
+    cfg = SimConfig(
+        stream_rate_bytes_per_s=profile.bytes_per_second_stream,
+        cache_bytes=128 << 30,
+        chunk_seconds=3600.0,
+    ).calibrate_origin(cal)
+    del cal
+    gc.collect()
+
+    t0 = time.perf_counter()
+    res = run_strategy("cache_only", synth.source(window=FULL_TRACE_WINDOW),
+                       profile.grid, cfg, None, engine=engine)
+    seconds = time.perf_counter() - t0
+    assert res.total_requests == n_requests, res.total_requests
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+    prefix = synth.materialize(FULL_TRACE_AUDIT)
+    mat = run_strategy("cache_only", prefix, profile.grid, cfg, None,
+                       engine=engine)
+    st = run_strategy(
+        "cache_only",
+        StreamingRequestSource.from_requests(prefix,
+                                             window=FULL_TRACE_WINDOW // 8),
+        profile.grid, cfg, None, engine=engine)
+    row = dict(engine=engine, requests=n_requests,
+               seconds=round(seconds, 2),
+               rps=round(n_requests / seconds, 1),
+               peak_rss_mb=round(peak_mb, 1),
+               counters_match=_counters(mat) == _counters(st))
+    print(json.dumps(row))
+
+
+def run_full_trace(n_requests: int, engines: list[str]) -> list[dict]:
+    """Spawn one worker subprocess per engine and collect their rows."""
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_dir + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    rows = []
+    for engine in engines:
+        print(f"full-trace: {engine} x {n_requests:,} requests "
+              f"(window={FULL_TRACE_WINDOW}) ...", flush=True)
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--_full-trace-worker", engine, "--full-trace",
+             str(n_requests)],
+            env=env, capture_output=True, text=True)
+        if proc.returncode != 0:
+            sys.stderr.write(proc.stdout)
+            sys.stderr.write(proc.stderr)
+            raise RuntimeError(f"full-trace worker failed for {engine}")
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.append(row)
+        print(json.dumps(row), flush=True)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -190,12 +321,56 @@ def main() -> None:
                     help="repetitions per engine (default: 2 full, 1 smoke)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: BENCH_engine.json)")
+    ap.add_argument("--full-trace", type=int, nargs="?",
+                    const=FULL_TRACE_DEFAULT, default=None, metavar="N",
+                    help="replay an N-request synthetic stream (default "
+                         f"{FULL_TRACE_DEFAULT:,}, the paper's OOI trace "
+                         "size) through the windowed streaming path and "
+                         "merge a full_trace row family into the JSON")
+    ap.add_argument("--_full-trace-worker", dest="full_trace_worker",
+                    default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     engines = [e.strip() for e in args.engines.split(",") if e.strip()]
     unknown = set(engines) - set(ENGINES)
     if unknown:
         ap.error(f"unknown engines: {sorted(unknown)}")
+    path = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_engine.json")
+
+    if args.full_trace_worker:
+        _full_trace_worker(args.full_trace_worker,
+                           args.full_trace or FULL_TRACE_DEFAULT)
+        return
+
+    if args.full_trace is not None:
+        # the reference engine replays per chunk position — hours at this
+        # scale — so full-trace rows default to the batch engines unless an
+        # engine set was given explicitly
+        ft_engines = (engines if args.engines != ",".join(ENGINES)
+                      else ["interval", "vector"])
+        ft_rows = run_full_trace(args.full_trace, ft_engines)
+        data = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+        data["full_trace"] = dict(
+            n_requests=args.full_trace, profile="ooi",
+            n_users=FULL_TRACE_USERS, seed=FULL_TRACE_SEED,
+            window=FULL_TRACE_WINDOW, audit_prefix=FULL_TRACE_AUDIT,
+            strategy="cache_only", chunk_seconds=3600.0, cache_gb=128,
+            host=dict(machine=platform.machine(), cpus=os.cpu_count()),
+            rows=ft_rows)
+        with open(path, "w") as f:
+            json.dump(data, f, indent=2)
+        print(f"wrote {os.path.abspath(path)}")
+        bad = [r["engine"] for r in ft_rows if not r["counters_match"]]
+        if bad:
+            print("FAIL: streamed-vs-materialized prefix audit failed for "
+                  f"{', '.join(bad)}", file=sys.stderr)
+            sys.exit(1)
+        return
+
     scenarios = SMOKE_SCENARIOS if args.smoke else FULL_SCENARIOS
     reps = args.reps or (1 if args.smoke else 2)
     rows = []
@@ -229,8 +404,15 @@ def main() -> None:
         out["serving_speedup_geomean"] = _geomean(
             [r["speedup"] for r in rows if r["serving"]])
         out["all_counters_match"] = all(r["counters_match"] for r in rows)
-    path = args.out or os.path.join(os.path.dirname(__file__), "..",
-                                    "BENCH_engine.json")
+    if os.path.exists(path):
+        # keep a previously merged full_trace row family across matrix runs
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if "full_trace" in prev:
+                out["full_trace"] = prev["full_trace"]
+        except (json.JSONDecodeError, OSError):
+            pass
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {os.path.abspath(path)}")
@@ -252,7 +434,7 @@ def main() -> None:
             and "vector" in engines):
         coarse = [r for r in rows
                   if r["serving"] and r["chunk_seconds"] >= 3600.0
-                  and r["cache_gb"] >= 64]
+                  and r["cache_gb"] >= 64 and "window" not in r]
         floor_bad = [f"{r['trace']}@{int(r['chunk_seconds'])}s"
                      for r in coarse
                      if r["speedup_interval"] < 0.9 * r["speedup_vector"]]

@@ -22,10 +22,13 @@ from repro.core.kmeans import kmeans
 from repro.core.markov import MarkovPredictor
 from repro.core.mining import MeshRulePredictor
 from repro.core.placement import PlacementEngine, select_hub
-from repro.core.simulator import SimConfig, SimResult, VDCSimulator, run_strategy
+from repro.core.simulator import (OutcomeAggregate, SimConfig, SimResult,
+                                  VDCSimulator, run_strategy)
 from repro.core.streaming import StreamingEngine
 from repro.core.trace import (GAGE_PROFILE, OOI_PROFILE, ObjectGrid, Request,
-                              RequestArrays, RequestList, TraceGenerator,
+                              RequestArrays, RequestList,
+                              StreamingRequestSource,
+                              StreamingTraceSynthesizer, TraceGenerator,
                               make_trace, requests_to_arrays)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

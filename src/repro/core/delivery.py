@@ -98,22 +98,53 @@ class HPMAdapter:
                 "plan() requires an unobserved model: this adapter already "
                 "processed requests via observe()")
         per_req = BatchedHPMPlanner(self.model).plan(requests)
-        ops: list[Sequence[PrefetchOp]] = []
-        subs: list[Sequence[tuple]] = []
-        empty: tuple = ()
-        for r, req_ops in zip(requests, per_req):
-            if not req_ops:
-                ops.append(empty)
-                subs.append(empty)
-                continue
-            # same per-op routing as observe(): stream ops become
-            # subscriptions, everything else is scheduled as a prefetch
-            r_subs = [_stream_subscription(r, op) for op in req_ops
-                      if op.reason == "stream"]
-            r_ops = [op for op in req_ops if op.reason != "stream"]
-            ops.append(r_ops or empty)
-            subs.append(r_subs or empty)
-        return PlannedPrediction(ops=ops, subscriptions=subs)
+        return _route_planned_ops(requests, per_req)
+
+    def planner(self) -> "HPMWindowPlanner":
+        """Window mode: a stateful planner whose ``plan_window`` calls may
+        split the trace at arbitrary points (``BatchedHPMPlanner`` carries
+        per-user classification state across windows; any split emits the
+        identical op stream).  Same fresh-model precondition as
+        :meth:`plan`."""
+        if self.model.users:
+            raise RuntimeError(
+                "planner() requires an unobserved model: this adapter "
+                "already processed requests via observe()")
+        return HPMWindowPlanner(BatchedHPMPlanner(self.model))
+
+
+def _route_planned_ops(requests: Sequence[Request],
+                       per_req: Sequence[Sequence[PrefetchOp]]
+                       ) -> PlannedPrediction:
+    """Route a planner's per-request op lists the way ``observe`` does:
+    stream ops become subscriptions, everything else is scheduled as a
+    prefetch.  ONE definition for whole-trace and windowed planning."""
+    ops: list[Sequence[PrefetchOp]] = []
+    subs: list[Sequence[tuple]] = []
+    empty: tuple = ()
+    for r, req_ops in zip(requests, per_req):
+        if not req_ops:
+            ops.append(empty)
+            subs.append(empty)
+            continue
+        r_subs = [_stream_subscription(r, op) for op in req_ops
+                  if op.reason == "stream"]
+        r_ops = [op for op in req_ops if op.reason != "stream"]
+        ops.append(r_ops or empty)
+        subs.append(r_subs or empty)
+    return PlannedPrediction(ops=ops, subscriptions=subs)
+
+
+class HPMWindowPlanner:
+    """Per-window prediction plans over a stateful :class:`BatchedHPMPlanner`
+    (streaming replay: plan storage is flushed per window)."""
+
+    def __init__(self, planner: BatchedHPMPlanner):
+        self._planner = planner
+
+    def plan_window(self, requests: Sequence[Request]) -> PlannedPrediction:
+        return _route_planned_ops(requests,
+                                  self._planner.plan_window(requests))
 
 
 class MD1Adapter:

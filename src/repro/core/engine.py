@@ -55,9 +55,10 @@ from repro.core.delivery import (PeerFetchRange, coalesce_peer_fetches,
 from repro.core.hpm import PrefetchOp
 from repro.core.placement import PlacementEngine
 from repro.core.simulator import (DEFAULT_BANDWIDTH_GBPS, GBPS,
-                                  USER_LINK_GBPS, RequestOutcome, SimConfig,
-                                  SimResult)
-from repro.core.trace import ObjectGrid, Request, requests_to_arrays
+                                  USER_LINK_GBPS, OutcomeAggregate,
+                                  RequestOutcome, SimConfig, SimResult)
+from repro.core.trace import (ObjectGrid, Request, StreamingRequestSource,
+                              requests_to_arrays)
 
 
 class _LazyOutcomes(collections.abc.Sequence):
@@ -169,13 +170,19 @@ class VectorVDCSimulator:
 
     # -- chunk addressing ----------------------------------------------------
 
-    def _setup_address_space(self, first: np.ndarray, n: np.ndarray) -> None:
+    def _setup_address_space(self, first: np.ndarray, n: np.ndarray,
+                             hint: tuple[int, int] | None = None) -> None:
         live = n > 0
         if live.any():
             lo = int(first[live].min())
             hi = int((first[live] + n[live]).max())
         else:
             lo, hi = 0, 1
+        if hint is not None:
+            # streaming sources declare their chunk extent up front so the
+            # first window can size the space for the whole trace (widening
+            # the span is a pure renaming of dense keys — see _run_stream)
+            lo, hi = min(lo, hint[0]), max(hi, hint[1])
         self._off = max(0, -lo) + 8
         self._span = hi + self._off + 8
         self._alloc_state()
@@ -236,8 +243,46 @@ class VectorVDCSimulator:
     # -- main entry ----------------------------------------------------------
 
     def run(self, requests: Sequence[Request], name: str = "") -> SimResult:
-        cfg = self.cfg
+        if isinstance(requests, StreamingRequestSource):
+            return self._run_stream(requests, name)
         arr = requests_to_arrays(requests)
+        n_req = len(arr)
+        A = self._prep_window(arr)
+        stream_engine = getattr(self.pf, "streaming", None)
+        static = (self.placement is None and stream_engine is None
+                  and getattr(self.pf, "static", False))
+        if static:
+            self._run_static(A)
+        else:
+            self._run_dynamic(A, stream_engine)
+
+        outcomes = _LazyOutcomes((
+            A["now"], arr.user_id, self._o_bytes, self._o_lat, self._o_tra,
+            self._o_loc, self._o_pref, self._o_peer, self._o_org,
+            self._o_pt))
+        if self.use_cache:
+            stats = {d: c.to_cache_stats() for d, c in self.caches.items()}
+        else:
+            stats = {d: CacheStats() for d in range(1, self.n_dtn)}
+        return SimResult(
+            name=name or self.pf.name,
+            outcomes=outcomes,
+            origin_requests=int((self._o_org > 0).sum()),
+            total_requests=n_req,
+            prefetch_issued_chunks=self._pref_issued,
+            prefetch_used_chunks=self._pref_used,
+            cache_stats=stats,
+            stream_pushes=stream_engine.pushes_emitted if stream_engine else 0,
+        )
+
+    def _prep_window(self, arr, hint: tuple[int, int] | None = None,
+                     grow: bool = False) -> dict:
+        """Per-trace (or per-window) request prep: chunk ranges, dense keys,
+        scalar mirrors and the outcome SoA.  With ``grow=False`` the address
+        space is sized from these requests (unioned with the chunk-extent
+        ``hint`` when given); with ``grow=True`` the existing space and all
+        cache state are kept, growing only if this window overflows it."""
+        cfg = self.cfg
         n_req = len(arr)
         scale = 1.0 / cfg.traffic_scale
         now_arr = arr.ts * scale
@@ -251,7 +296,15 @@ class VectorVDCSimulator:
         dtn_arr = arr.continent + 1
         self._obj_arr = arr.obj
         self._first_arr = first
-        self._setup_address_space(first, k_eff)
+        if not grow:
+            self._setup_address_space(first, k_eff, hint)
+        else:
+            live = k_eff > 0
+            if live.any():
+                lo = int(first[live].min())
+                hi = int((first[live] + k_eff[live]).max())
+                if lo + self._off < 0 or hi + self._off > self._span:
+                    self._grow(lo, hi)
         self._base = arr.obj * self._span + first + self._off
 
         cap_min0 = min((c.capacity for c in self.caches.values()), default=0)
@@ -278,34 +331,83 @@ class VectorVDCSimulator:
         self._o_peer = np.zeros(n_req, np.int64)
         self._o_org = np.zeros(n_req, np.int64)
         self._o_bytes = np.where(zero, 0, arr.size_bytes)
+        return dict(now=now_arr, dtn=dtn_arr, k=k_eff, pc=per_chunk,
+                    zero=zero, arr=arr)
 
+    # -- streaming entry (windowed replay over a StreamingRequestSource) -----
+
+    def _run_stream(self, source: StreamingRequestSource,
+                    name: str = "") -> SimResult:
+        """Windowed replay: identical per-request arithmetic and event order
+        to :meth:`run` on the materialized trace, with only one window of
+        requests resident at a time.
+
+        Exactness: static block replay never depends on block extent (the
+        truncation invariants hold for any boundary placement), so forcing
+        block boundaries at window edges changes no counter.  The dynamic
+        path keeps the event heap and its creation counter alive across
+        windows; requests are never heaped, and the merged loop's strict
+        ``event_ts < request_ts`` pop condition reproduces the materialized
+        event order for any window split.  Batched prediction goes through
+        the prefetcher's stateful window planner, whose op stream is
+        window-split invariant (``tests/test_hpm_equivalence.py``).  Outcome
+        columns are folded into an :class:`OutcomeAggregate` per window
+        instead of a ``len(trace)`` outcome list, so peak memory is bounded
+        by the window size plus the dense key space."""
+        cfg = self.cfg
         stream_engine = getattr(self.pf, "streaming", None)
         static = (self.placement is None and stream_engine is None
                   and getattr(self.pf, "static", False))
-        A = dict(now=now_arr, dtn=dtn_arr, k=k_eff, pc=per_chunk,
-                 zero=zero, arr=arr)
-        if static:
-            self._run_static(A)
-        else:
-            self._run_dynamic(A, stream_engine)
-
-        outcomes = _LazyOutcomes((
-            now_arr, arr.user_id, self._o_bytes, self._o_lat, self._o_tra,
-            self._o_loc, self._o_pref, self._o_peer, self._o_org,
-            self._o_pt))
+        hint = None
+        if source.tr_bounds is not None:
+            cs = cfg.chunk_seconds
+            hint = (int(math.floor(source.tr_bounds[0] / cs)),
+                    int(math.ceil(source.tr_bounds[1] / cs)) + 1)
+        agg = OutcomeAggregate()
+        origin_requests = 0
+        n_total = 0
+        heap: list = []
+        counter = itertools.count()   # orders dynamic events among themselves
+        planner = None
+        if not static and cfg.batched_prediction:
+            planner_fn = getattr(self.pf, "planner", None)
+            if planner_fn is not None:
+                planner = planner_fn()
+        first = True
+        for window in source.windows():
+            arr = requests_to_arrays(window)
+            A = self._prep_window(arr, hint=hint, grow=not first)
+            first = False
+            if static:
+                self._run_static(A)
+            else:
+                self._run_dyn_window(A, stream_engine, heap, counter, planner)
+            agg.add_columns(self._o_bytes, self._o_lat, self._o_tra,
+                            self._o_loc, self._o_pref, self._o_peer,
+                            self._o_org, self._o_pt)
+            origin_requests += int((self._o_org > 0).sum())
+            n_total += len(arr)
+        if first:
+            # empty source: allocate the (empty) address space so cache
+            # stats report per-DTN zeros exactly like an empty materialized
+            # run
+            self._prep_window(requests_to_arrays([]), hint=hint)
+        if not static:
+            self._dyn_drain(heap, stream_engine)
         if self.use_cache:
             stats = {d: c.to_cache_stats() for d, c in self.caches.items()}
         else:
             stats = {d: CacheStats() for d in range(1, self.n_dtn)}
         return SimResult(
             name=name or self.pf.name,
-            outcomes=outcomes,
-            origin_requests=int((self._o_org > 0).sum()),
-            total_requests=n_req,
+            outcomes=[],
+            origin_requests=origin_requests,
+            total_requests=n_total,
             prefetch_issued_chunks=self._pref_issued,
             prefetch_used_chunks=self._pref_used,
             cache_stats=stats,
             stream_pushes=stream_engine.pushes_emitted if stream_engine else 0,
+            aggregate=agg,
         )
 
     # -- static fast path (no dynamic events) --------------------------------
@@ -618,6 +720,53 @@ class VectorVDCSimulator:
     # -- dynamic path (prefetch / streaming / placement events) --------------
 
     def _run_dynamic(self, A: dict, stream_engine) -> None:
+        # batched prediction: prefetchers that expose a plan (hpm) have
+        # their whole op stream pre-computed in two phases — classification
+        # over per-user arrays, then vmapped-ARIMA-bank flush — instead of
+        # per-request observe() calls inside the event loop.  The plan is
+        # op-for-op identical to the online stream (the planner contract).
+        # Only this mode materializes all scaled requests at once; the
+        # online path keeps constructing them per event.
+        plan = None
+        reqs = None
+        plan_fn = getattr(self.pf, "plan", None)
+        if plan_fn is not None and self.cfg.batched_prediction:
+            reqs = self._scaled_requests(A)
+            plan = plan_fn(reqs)
+        heap: list = []
+        counter = itertools.count(len(A["arr"]))   # requests own 0..n-1
+        self._dyn_loop(A, stream_engine, heap, counter, plan, reqs)
+        self._dyn_drain(heap, stream_engine)
+
+    def _run_dyn_window(self, A: dict, stream_engine, heap: list, counter,
+                        planner) -> None:
+        """One window of the streaming dynamic path: batch-plan this window
+        through the stateful window planner (when available), then run the
+        shared merged loop against the persistent event heap."""
+        plan = reqs = None
+        if planner is not None:
+            reqs = self._scaled_requests(A)
+            plan = planner.plan_window(reqs)
+        self._dyn_loop(A, stream_engine, heap, counter, plan, reqs)
+
+    def _scaled_requests(self, A: dict) -> list[Request]:
+        arr = A["arr"]
+        return list(map(Request, A["now"].tolist(), arr.user_id.tolist(),
+                        arr.obj.tolist(), arr.tr_start.tolist(),
+                        arr.tr_end.tolist(), arr.size_bytes.tolist(),
+                        arr.continent.tolist()))
+
+    def _dyn_drain(self, heap: list, stream_engine) -> None:
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            if kind == "s":
+                if stream_engine is not None:
+                    self._apply_push(payload)
+            else:
+                self._apply_prefetch(payload, t)
+
+    def _dyn_loop(self, A: dict, stream_engine, heap: list, counter,
+                  plan, reqs) -> None:
         arr = A["arr"]
         n_req = len(arr)
         cfg = self.cfg
@@ -629,27 +778,12 @@ class VectorVDCSimulator:
         tre_l = arr.tr_end.tolist()
         size_l = arr.size_bytes.tolist()
         cont_l = arr.continent.tolist()
-        # batched prediction: prefetchers that expose a planner (hpm) have
-        # their whole op stream pre-computed in two phases — classification
-        # over per-user arrays, then vmapped-ARIMA-bank flush — instead of
-        # per-request observe() calls inside the event loop.  The plan is
-        # op-for-op identical to the online stream (the planner contract).
-        # Only this mode materializes all scaled requests at once; the
-        # online path keeps constructing them per event.
-        plan = None
-        reqs = None
-        plan_fn = getattr(pf := self.pf, "plan", None)
-        if plan_fn is not None and cfg.batched_prediction:
-            reqs = list(map(Request, now_l, user_l, obj_l, trs_l, tre_l,
-                            size_l, cont_l))
-            plan = plan_fn(reqs)
-        heap: list = []
-        counter = itertools.count(n_req)   # request events own counters 0..n-1
+        pf = self.pf
         placement = self.placement
         user_dtn = self._user_dtn
         i = 0
-        while i < n_req or heap:
-            if heap and (i >= n_req or heap[0][0] < now_l[i]):
+        while i < n_req:
+            if heap and heap[0][0] < now_l[i]:
                 t, _, kind, payload = heapq.heappop(heap)
                 if kind == "s":
                     if stream_engine is not None:
@@ -1627,8 +1761,19 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         stream_engine = getattr(self.pf, "streaming", None)
         static = (self.placement is None and stream_engine is None
                   and getattr(self.pf, "static", False))
-        if not (static and self.use_cache
-                and self.cfg.cache_policy.lower() == "lru"):
+        eligible = (static and self.use_cache
+                    and self.cfg.cache_policy.lower() == "lru")
+        if isinstance(requests, StreamingRequestSource):
+            # The sharded driver needs whole-trace event logs for its audit,
+            # and a source without a tr-bounds hint cannot pre-size the key
+            # space; both fall back to the inherited (equally exact) vector
+            # streaming path.  ``last_peer_fetches`` stays empty in
+            # streaming mode — accumulating it would grow with the trace.
+            if (eligible and requests.tr_bounds is not None
+                    and self._resolve_workers(self.n_dtn) <= 1):
+                return self._run_stream_interval(requests, name)
+            return super().run(requests, name)
+        if not eligible:
             return super().run(requests, name)
         return self._run_static_interval(requests, name)
 
@@ -1768,6 +1913,151 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             out = self._run_sweep(P)
         return self._finish(P, out, name)
 
+    # -- streaming entry (windowed static-LRU interval replay) ---------------
+
+    def _run_stream_interval(self, source: StreamingRequestSource,
+                             name: str) -> SimResult:
+        """Static-LRU interval replay over a windowed source.
+
+        The dense key space is fixed up front from the source's
+        ``tr_bounds`` hint instead of the trace's observed chunk extremes.
+        That is a pure renaming of chunk keys — per-object key ranges stay
+        separated by >= 8 keys, so run merges, commits and evictions are
+        position-identical to the materialized run — which lets every
+        window share one address space with no remapping.  Interval states,
+        the sweep's peer-candidate order, the fused/sweep route (picked
+        from the first window's mean chunk count) and phase C's origin
+        queue persist across windows; per-request state is recomputed per
+        window, so peak memory is bounded by the window size plus the
+        capacity-bounded interval sets."""
+        cfg = self.cfg
+        cs = cfg.chunk_seconds
+        tr_lo, tr_hi = source.tr_bounds
+        c_lo = int(math.floor(tr_lo / cs))
+        c_hi = int(math.ceil(tr_hi / cs)) + 1
+        off = max(0, -c_lo) + 8
+        span = c_hi + off + 8
+        scale = 1.0 / cfg.traffic_scale
+        cap = cfg.cache_bytes
+        states: dict | None = None
+        sweep_cands = None
+        free = [0.0] * cfg.n_service_procs
+        ov = cfg.origin_latency_s
+        bw0 = self._bw0
+        inf = float("inf")
+        submit = origin_submit
+        agg = OutcomeAggregate()
+        origin_requests = 0
+        n_total = 0
+        pos0 = 0
+        for window in source.windows():
+            arr = requests_to_arrays(window)
+            n_req = len(arr)
+            now_arr = arr.ts * scale
+            first, n_chunks = chunk_bounds_bulk(
+                arr.tr_start, np.minimum(arr.tr_end, now_arr), cs)
+            zero = (n_chunks == 0) | (arr.size_bytes == 0)
+            k_eff = np.where(zero, 0, n_chunks)
+            per_chunk = np.maximum(1, arr.size_bytes // np.maximum(1, n_chunks))
+            dtn_arr = arr.continent + 1
+            live = np.nonzero(k_eff > 0)[0]
+            if len(live):
+                if (int(first[live].min()) < c_lo
+                        or int((first + k_eff)[live].max()) > c_hi):
+                    raise ValueError(
+                        "streaming source emitted a chunk range outside its "
+                        "tr_bounds hint")
+            if states is None:
+                n_live = len(live)
+                mean_k = (float(k_eff[live].sum()) / n_live) if n_live else 0.0
+                fused = (cfg.interval_shards is None
+                         and mean_k < self.SWEEP_MIN_CHUNKS_PER_REQ)
+                cls = (FlatIntervalState
+                       if (fused and cfg.interval_flat_state)
+                       else IntervalLRUState)
+                states = {d: cls(cap, log_events=False)
+                          for d in range(1, self.n_dtn)}
+                self.caches = states
+                if not fused:
+                    sweep_cands = _peer_cands(self.bw, self.n_dtn)
+            base = arr.obj * span + first + off
+            lo_a = base[live]
+            nh_full = np.zeros(n_req, np.int64)
+            o_peer = np.zeros(n_req, np.int64)
+            o_pt = np.zeros(n_req, np.float64)
+            n_still = np.zeros(n_req, np.int64)
+            if sweep_cands is None:
+                nh_l, acc_l, pdt_l, still_l, _ = _fused_block_replay(
+                    states, self.bw, cfg.enable_peer_cache, False,
+                    pos0 + live, dtn_arr[live], arr.obj[live], lo_a,
+                    lo_a + k_eff[live], per_chunk[live])
+                nh_full[live] = nh_l
+                o_peer[live] = acc_l * per_chunk[live]
+                o_pt[live] = pdt_l
+                tra = nh_full * (per_chunk / self._ulink)
+                tra[live] += pdt_l
+                n_still[live] = still_l
+            else:
+                peer_ranges: list = []   # window-local, dropped (bounded mem)
+                nh_l, miss_pos, miss_acc, miss_pdt, miss_still = _sweep_serve(
+                    states, sweep_cands, cfg.enable_peer_cache,
+                    dtn_arr[live].tolist(), arr.obj[live].tolist(),
+                    lo_a.tolist(), k_eff[live].tolist(),
+                    per_chunk[live].tolist(), (pos0 + live).tolist(),
+                    peer_ranges)
+                nh_full[live] = nh_l
+                tra = nh_full * (per_chunk / self._ulink)
+                if miss_pos:
+                    midx = live[miss_pos]
+                    o_peer[midx] = (np.asarray(miss_acc, np.int64)
+                                    * per_chunk[midx])
+                    o_pt[midx] = miss_pdt
+                    tra[midx] += miss_pdt
+                    n_still[midx] = miss_still
+            # phase C against the persistent origin queue: the submit
+            # sequence is the trace-order (now, duration) sequence, so
+            # per-window replay is arithmetic-identical to whole-trace
+            o_lat = np.zeros(n_req, np.float64)
+            o_org = np.zeros(n_req, np.int64)
+            nz = np.nonzero(n_still)[0]
+            if len(nz):
+                lat_l: list[float] = []
+                dtr_l: list[float] = []
+                ob_l = (per_chunk[nz] * n_still[nz]).tolist()
+                for now, d, ob in zip(now_arr[nz].tolist(),
+                                      dtn_arr[nz].tolist(), ob_l):
+                    b = bw0[d]
+                    start, end = submit(free, ov, now,
+                                        ob / b if b > 0.0 else inf)
+                    lat_l.append(start - now)
+                    dtr_l.append(end - start)
+                o_lat[nz] = lat_l
+                tra[nz] += dtr_l
+                o_org[nz] = per_chunk[nz] * n_still[nz]
+            o_loc = nh_full * per_chunk
+            o_bytes = np.where(zero, 0, arr.size_bytes)
+            agg.add_columns(o_bytes, o_lat, tra, o_loc,
+                            np.zeros(n_req, np.int64), o_peer, o_org, o_pt)
+            origin_requests += int((o_org > 0).sum())
+            n_total += n_req
+            pos0 += n_req
+        if states is None:
+            states = {d: IntervalLRUState(cap, log_events=False)
+                      for d in range(1, self.n_dtn)}
+            self.caches = states
+        stats = {d: st.to_cache_stats() for d, st in states.items()}
+        return SimResult(
+            name=name or self.pf.name,
+            outcomes=[],
+            origin_requests=origin_requests,
+            total_requests=n_total,
+            prefetch_issued_chunks=0,
+            prefetch_used_chunks=0,
+            cache_stats=stats,
+            stream_pushes=0,
+            aggregate=agg,
+        )
+
     # -- global fused block replay (coarse-regime default) -------------------
 
     def _run_fused(self, P: dict) -> dict:
@@ -1825,75 +2115,11 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         cap = cfg.cache_bytes
         states = {d: IntervalLRUState(cap, log_events=False)
                   for d in range(1, self.n_dtn)}
-        bw = self.bw
-        # peer candidates per DTN, best-first: sorted by (-bw, id) a greedy
-        # first-holder assignment equals the reference's max-bw/lowest-id
-        # rule; peers that cannot beat the origin link are pruned outright
-        cands: dict[int, list] = {}
-        for d in range(1, self.n_dtn):
-            ob = float(bw[0, d])
-            cl = [(float(bw[d2, d]), d2) for d2 in range(1, self.n_dtn)
-                  if d2 != d and float(bw[d2, d]) > ob
-                  and float(bw[d2, d]) > 0.0]
-            cl.sort(key=lambda t: (-t[0], t[1]))
-            cands[d] = cl
-        enable_peer = cfg.enable_peer_cache
-        nh_l: list[int] = []
-        miss_pos: list[int] = []
-        miss_acc: list[int] = []
-        miss_pdt: list[float] = []
-        miss_still: list[int] = []
-        org_pos: list[int] = []
-        org_n: list[int] = []
+        cands = _peer_cands(self.bw, self.n_dtn)
         peer_ranges: list[tuple] = []
-        for pos, (d, o, lo, kk, pc) in enumerate(
-                zip(dtn_l, obj_l, lo_l, k_l, pc_l)):
-            st = states[d]
-            nh, miss = st.lookup_touch(o, lo, lo + kk, pc)
-            nh_l.append(nh)
-            if not miss:
-                continue
-            ridx = idx_l[pos]
-            n_acc = 0
-            peer_dt = 0.0
-            if enable_peer:
-                unassigned = miss
-                acc_runs: list[tuple[int, int]] = []
-                for bwv, d2 in cands[d]:
-                    if not unassigned:
-                        break
-                    cov_of = states[d2].coverage_runs
-                    rem: list[tuple[int, int]] = []
-                    for a, b in unassigned:
-                        p2 = a
-                        for s, e in cov_of(o, a, b):
-                            if s > p2:
-                                rem.append((p2, s))
-                            acc_runs.append((s, e))
-                            n_acc += e - s
-                            peer_dt += (e - s) * (pc / bwv)
-                            peer_ranges.append(
-                                PeerFetchRange(ridx, d, d2, s, e))
-                            p2 = e
-                        if p2 < b:
-                            rem.append((p2, b))
-                    unassigned = rem
-                if acc_runs:
-                    acc_runs.sort()
-                    st.insert_runs(o, acc_runs, pc, ridx)
-                still = unassigned
-            else:
-                still = miss
-            n_still = 0
-            if still:
-                n_still = sum(b - a for a, b in still)
-                st.insert_runs(o, still, pc, ridx)
-                org_pos.append(pos)
-                org_n.append(n_still)
-            miss_pos.append(pos)
-            miss_acc.append(n_acc)
-            miss_pdt.append(peer_dt)
-            miss_still.append(n_still)
+        nh_l, miss_pos, miss_acc, miss_pdt, miss_still = _sweep_serve(
+            states, cands, cfg.enable_peer_cache, dtn_l, obj_l, lo_l, k_l,
+            pc_l, idx_l, peer_ranges)
         per_chunk = P["pc"]
         nh_full = np.zeros(n_req, np.int64)
         nh_full[live] = nh_l
@@ -2067,3 +2293,81 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             cache_stats=out["stats"],
             stream_pushes=0,
         )
+
+
+def _peer_cands(bw: np.ndarray, n_dtn: int) -> dict[int, list]:
+    """Peer candidates per DTN, best-first: sorted by (-bw, id) a greedy
+    first-holder assignment equals the reference's max-bw/lowest-id rule;
+    peers that cannot beat the origin link are pruned outright."""
+    cands: dict[int, list] = {}
+    for d in range(1, n_dtn):
+        ob = float(bw[0, d])
+        cl = [(float(bw[d2, d]), d2) for d2 in range(1, n_dtn)
+              if d2 != d and float(bw[d2, d]) > ob
+              and float(bw[d2, d]) > 0.0]
+        cl.sort(key=lambda t: (-t[0], t[1]))
+        cands[d] = cl
+    return cands
+
+
+def _sweep_serve(states: dict, cands: dict, enable_peer: bool,
+                 dtn_l: list, obj_l: list, lo_l: list, k_l: list,
+                 pc_l: list, idx_l: list, peer_ranges: list):
+    """Serve one run of live requests through the interval sweep: hit/miss
+    split and LRU touch by interval intersection, peer fetch ranges
+    resolved inline against the other caches' current coverage (the
+    reference's peer-before-origin insert order, applied exactly).
+    Mutates ``states`` and appends accepted transfers to ``peer_ranges``;
+    returns per-request hit counts plus the miss-row columns."""
+    nh_l: list[int] = []
+    miss_pos: list[int] = []
+    miss_acc: list[int] = []
+    miss_pdt: list[float] = []
+    miss_still: list[int] = []
+    for pos, (d, o, lo, kk, pc) in enumerate(
+            zip(dtn_l, obj_l, lo_l, k_l, pc_l)):
+        st = states[d]
+        nh, miss = st.lookup_touch(o, lo, lo + kk, pc)
+        nh_l.append(nh)
+        if not miss:
+            continue
+        ridx = idx_l[pos]
+        n_acc = 0
+        peer_dt = 0.0
+        if enable_peer:
+            unassigned = miss
+            acc_runs: list[tuple[int, int]] = []
+            for bwv, d2 in cands[d]:
+                if not unassigned:
+                    break
+                cov_of = states[d2].coverage_runs
+                rem: list[tuple[int, int]] = []
+                for a, b in unassigned:
+                    p2 = a
+                    for s, e in cov_of(o, a, b):
+                        if s > p2:
+                            rem.append((p2, s))
+                        acc_runs.append((s, e))
+                        n_acc += e - s
+                        peer_dt += (e - s) * (pc / bwv)
+                        peer_ranges.append(
+                            PeerFetchRange(ridx, d, d2, s, e))
+                        p2 = e
+                    if p2 < b:
+                        rem.append((p2, b))
+                unassigned = rem
+            if acc_runs:
+                acc_runs.sort()
+                st.insert_runs(o, acc_runs, pc, ridx)
+            still = unassigned
+        else:
+            still = miss
+        n_still = 0
+        if still:
+            n_still = sum(b - a for a, b in still)
+            st.insert_runs(o, still, pc, ridx)
+        miss_pos.append(pos)
+        miss_acc.append(n_acc)
+        miss_pdt.append(peer_dt)
+        miss_still.append(n_still)
+    return nh_l, miss_pos, miss_acc, miss_pdt, miss_still

@@ -249,14 +249,37 @@ class BatchedHPMPlanner:
     The emitted stream is bitwise identical to calling ``observe`` per
     request (fixed-width ARIMA bank + shared helpers; pinned by
     ``tests/test_hpm_equivalence.py``).
+
+    **Window mode**: the planner keeps all per-user classification state
+    (and the rule memo / subscription set) on the instance, so a trace may
+    be fed in arbitrary timestamp-ordered windows via repeated
+    :meth:`plan_window` calls.  Prediction is a pure per-user function of
+    that user's request subsequence — cache state never feeds back — and
+    the ARIMA bank's rows are batch-composition independent (pinned by
+    ``test_bank_rows_independent_of_batch_composition``), so *any* window
+    split (width 1 → whole trace) emits the identical op stream; one
+    :meth:`plan` call on a fresh instance is just the single-window case.
+    Phase-2 bank flushes happen once per window, bounding peak plan
+    storage by the window size instead of the trace length.
     """
 
     def __init__(self, model: HybridPrefetcher):
         self.model = model
+        # per-user (st, uniq, gaps): uniq == sorted(set(st.timestamps)),
+        # gaps == np.diff(uniq) — maintained incrementally across windows
+        self._users: dict[int, tuple[_UserState, list[float], list[float]]] = {}
+        self._rule_memo: dict[frozenset, list] = {}
+        self._subscribed: set[tuple[int, int]] = set()
 
     def plan(self, requests: Sequence[Request]) -> list[Sequence[PrefetchOp]]:
         """Per-request op lists (``"stream"`` ops included) equal to what
         ``observe`` would emit, without mutating the online model."""
+        return self.plan_window(requests)
+
+    def plan_window(self, requests: Sequence[Request]
+                    ) -> list[Sequence[PrefetchOp]]:
+        """Plan one timestamp-ordered window of the trace, carrying the
+        per-user classification state forward to the next call."""
         model = self.model
         offset = model.offset
         rp = model.rule_predictor
@@ -268,13 +291,18 @@ class BatchedHPMPlanner:
 
         # (slot, gaps_f32, last_ts, max_gap, req_ts, width, objs)
         pending: list[tuple] = []
-        rule_memo: dict[frozenset, list] = {}
-        subscribed: set[tuple[int, int]] = set()
+        rule_memo = self._rule_memo
+        subscribed = self._subscribed
 
         for uid, idxs in by_user.items():
-            st = _UserState()
-            uniq: list[float] = []      # == sorted(set(st.timestamps))
-            gaps: list[float] = []      # == np.diff(uniq)
+            cached = self._users.get(uid)
+            if cached is None:
+                st = _UserState()
+                uniq: list[float] = []
+                gaps: list[float] = []
+                self._users[uid] = (st, uniq, gaps)
+            else:
+                st, uniq, gaps = cached
             for i in idxs:
                 r = requests[i]
                 prev_len = len(st.timestamps)
@@ -327,6 +355,9 @@ class BatchedHPMPlanner:
                         ts_l = st.timestamps
                         gap = (ts_l[-1] - ts_l[-2]) if len(ts_l) >= 2 else 300.0
                         out[i] = _rules_ops(r, offset, r.ts + gap, preds)
+            # uniq/gaps are rebound on trim/out-of-order branches: store the
+            # current bindings for the next window
+            self._users[uid] = (st, uniq, gaps)
 
         if pending:
             forecasts = model.arima.batched_forecast([t[1] for t in pending])

@@ -34,7 +34,7 @@ from repro.core.delivery import Prefetcher
 from repro.core.hpm import PrefetchOp
 from repro.core.placement import PlacementEngine
 from repro.core.streaming import StreamingEngine
-from repro.core.trace import ObjectGrid, Request
+from repro.core.trace import ObjectGrid, Request, StreamingRequestSource
 
 GBPS = 1e9 / 8  # bytes per second per Gbps
 
@@ -163,6 +163,75 @@ class RequestOutcome(typing.NamedTuple):
 
 
 @dataclasses.dataclass
+class OutcomeAggregate:
+    """Running totals over :class:`RequestOutcome` columns.
+
+    Streaming replay cannot keep the per-request outcome list (it is
+    O(trace length)); it folds every window's outcomes into this instead.
+    Integer fields are exact sums — the cross-engine equivalence contract
+    applies to them verbatim; float sums match a materialized run up to
+    summation-order rounding only.
+    """
+
+    n: int = 0
+    n_bytes_pos: int = 0        # outcomes with bytes > 0 (throughput mean)
+    bytes: int = 0
+    local_bytes: int = 0
+    prefetched_bytes: int = 0
+    peer_bytes: int = 0
+    origin_bytes: int = 0
+    latency_sum: float = 0.0
+    transfer_sum: float = 0.0
+    peer_time_sum: float = 0.0
+    throughput_sum: float = 0.0
+
+    def add(self, o: "RequestOutcome") -> None:
+        self.n += 1
+        self.bytes += o.bytes
+        self.local_bytes += o.local_bytes
+        self.prefetched_bytes += o.prefetched_bytes
+        self.peer_bytes += o.peer_bytes
+        self.origin_bytes += o.origin_bytes
+        self.latency_sum += o.latency
+        self.transfer_sum += o.transfer_time
+        self.peer_time_sum += o.peer_time
+        if o.bytes > 0:
+            self.n_bytes_pos += 1
+            self.throughput_sum += o.throughput_mbps
+
+    def add_columns(self, bytes_, lat, tra, loc, pref, peer, org, pt) -> None:
+        """Fold one window of outcome columns (the engines' SoA form)."""
+        bytes_ = np.asarray(bytes_)
+        lat = np.asarray(lat, np.float64)
+        tra = np.asarray(tra, np.float64)
+        self.n += int(bytes_.shape[0])
+        self.bytes += int(bytes_.sum())
+        self.local_bytes += int(np.asarray(loc).sum())
+        self.prefetched_bytes += int(np.asarray(pref).sum())
+        self.peer_bytes += int(np.asarray(peer).sum())
+        self.origin_bytes += int(np.asarray(org).sum())
+        self.latency_sum += float(lat.sum())
+        self.transfer_sum += float(tra.sum())
+        self.peer_time_sum += float(np.asarray(pt, np.float64).sum())
+        pos = bytes_ > 0
+        self.n_bytes_pos += int(pos.sum())
+        dt = lat + tra
+        ok = pos & (dt > 0)
+        thr = np.zeros(bytes_.shape[0], np.float64)
+        np.divide(bytes_ * 8.0, dt, out=thr, where=ok)
+        thr /= 1e6      # same per-element arithmetic as throughput_mbps
+        self.throughput_sum += float(thr.sum())
+
+    @classmethod
+    def from_outcomes(cls, outcomes: "Sequence[RequestOutcome]"
+                      ) -> "OutcomeAggregate":
+        agg = cls()
+        for o in outcomes:
+            agg.add(o)
+        return agg
+
+
+@dataclasses.dataclass
 class SimResult:
     name: str
     outcomes: list[RequestOutcome]
@@ -172,14 +241,30 @@ class SimResult:
     prefetch_used_chunks: int
     cache_stats: dict[int, CacheStats]
     stream_pushes: int
+    # Streaming replay: per-request outcomes are not retained; their totals
+    # live here and the derived metrics below fall back to them.
+    aggregate: "OutcomeAggregate | None" = None
+
+    def outcome_totals(self) -> OutcomeAggregate:
+        """Outcome column totals, independent of how the trace was replayed
+        (the streaming==materialized equivalence tests compare these)."""
+        if self.aggregate is not None:
+            return self.aggregate
+        return OutcomeAggregate.from_outcomes(self.outcomes)
 
     @property
     def mean_throughput_mbps(self) -> float:
+        if not self.outcomes and self.aggregate is not None:
+            a = self.aggregate
+            return a.throughput_sum / a.n_bytes_pos if a.n_bytes_pos else 0.0
         v = [o.throughput_mbps for o in self.outcomes if o.bytes > 0]
         return float(np.mean(v)) if v else 0.0
 
     @property
     def mean_latency_s(self) -> float:
+        if not self.outcomes and self.aggregate is not None:
+            a = self.aggregate
+            return a.latency_sum / a.n if a.n else 0.0
         v = [o.latency for o in self.outcomes]
         return float(np.mean(v)) if v else 0.0
 
@@ -196,6 +281,10 @@ class SimResult:
     @property
     def local_access_frac(self) -> tuple[float, float]:
         """(cached_frac, prefetched_frac) of bytes served at the local DTN."""
+        if not self.outcomes and self.aggregate is not None:
+            a = self.aggregate
+            tot = a.bytes or 1
+            return a.local_bytes / tot, a.prefetched_bytes / tot
         tot = sum(o.bytes for o in self.outcomes) or 1
         cached = sum(o.local_bytes for o in self.outcomes)
         pref = sum(o.prefetched_bytes for o in self.outcomes)
@@ -275,6 +364,8 @@ class VDCSimulator:
     # -- main entry ----------------------------------------------------------
 
     def run(self, requests: Sequence[Request], name: str = "") -> SimResult:
+        if isinstance(requests, StreamingRequestSource):
+            return self._run_stream(requests, name)
         cfg = self.cfg
         # traffic scaling compresses/expands the request timeline
         scale = 1.0 / cfg.traffic_scale
@@ -332,6 +423,77 @@ class VDCSimulator:
             prefetch_used_chunks=used,
             cache_stats={d: c.stats for d, c in self.caches.items()},
             stream_pushes=stream_engine.pushes_emitted if stream_engine else 0,
+        )
+
+    def _run_stream(self, source: StreamingRequestSource,
+                    name: str = "") -> SimResult:
+        """Windowed replay of a :class:`StreamingRequestSource` — the same
+        event loop as :meth:`run` without ever heaping the full trace.
+
+        Exactness: :meth:`run` pushes all requests up front with creation
+        counters ``0..n-1``; dynamic events get counters ``>= n``, so on a
+        timestamp tie a request always pops before any event, and events
+        order among themselves by creation.  The merged loop below — pop
+        events strictly *before* the next request's timestamp, serve the
+        request, then drain — reproduces exactly that order, so outcomes
+        are identical; only their storage differs (folded into
+        :class:`OutcomeAggregate` instead of a per-request list).
+        """
+        cfg = self.cfg
+        scale = 1.0 / cfg.traffic_scale
+        events: list[tuple[float, int, str, object]] = []
+        counter = itertools.count()
+        agg = OutcomeAggregate()
+        origin_requests = 0
+        stream_engine: StreamingEngine | None = getattr(self.pf, "streaming", None)
+
+        def handle(now: float, kind: str, payload) -> None:
+            if kind == "push" and stream_engine is not None:
+                self._apply_stream_push(payload)
+            elif kind == "prefetch":
+                self._apply_prefetch(payload, now, events, counter)
+
+        for window in source.windows():
+            for r in window:
+                now = r.ts * scale
+                while events and events[0][0] < now:
+                    ev_now, _, kind, payload = heapq.heappop(events)
+                    handle(ev_now, kind, payload)
+                r_scaled = dataclasses.replace(r, ts=now)
+                dtn = self._dtn_of(r_scaled)
+                self._recent_requests.append(r_scaled)
+                absorbed = bool(stream_engine and stream_engine.absorb(r_scaled))
+                outcome = self._serve(r_scaled, dtn, now, absorbed)
+                agg.add(outcome)
+                if outcome.origin_bytes > 0:
+                    origin_requests += 1
+                ops = self.pf.observe(r_scaled)
+                for op in ops:
+                    heapq.heappush(events, (max(now, op.issue_ts),
+                                            next(counter), "prefetch", op))
+                if stream_engine is not None:
+                    for push in stream_engine.pushes_until(now):
+                        heapq.heappush(events,
+                                       (push.ts, next(counter), "push", push))
+                if (self.placement is not None
+                        and now - self._last_placement_ts >= cfg.placement_period):
+                    self._run_placement(now)
+                    self._last_placement_ts = now
+        while events:
+            ev_now, _, kind, payload = heapq.heappop(events)
+            handle(ev_now, kind, payload)
+
+        used = sum(1 for v in self._prefetched.values() if v)
+        return SimResult(
+            name=name or self.pf.name,
+            outcomes=[],
+            origin_requests=origin_requests,
+            total_requests=agg.n,
+            prefetch_issued_chunks=len(self._prefetched),
+            prefetch_used_chunks=used,
+            cache_stats={d: c.stats for d, c in self.caches.items()},
+            stream_pushes=stream_engine.pushes_emitted if stream_engine else 0,
+            aggregate=agg,
         )
 
     # -- serving -------------------------------------------------------------

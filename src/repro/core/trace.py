@@ -18,9 +18,11 @@ generators — that is the reproduction of §III of the paper.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import math
 from itertools import zip_longest
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -155,6 +157,44 @@ def _zipf_probs(n: int, alpha: float = 1.1) -> np.ndarray:
     return p / p.sum()
 
 
+def _plan_program_users(profile: TraceProfile, rng: np.random.Generator,
+                        n_program: int) -> list[dict]:
+    """Assign each program user a behaviour.  User counts follow the volume
+    mix (more users where more volume).  Shared by :class:`TraceGenerator`
+    (which applies exact post-hoc volume calibration on top) and
+    :class:`StreamingTraceSynthesizer` (which streams, so it cannot)."""
+    p = profile
+    mix = _normalize(p.type_volume_mix)
+    dup = p.overlap_duplicate_frac
+    k_overlap = max(2, int(round(1.0 / max(1e-6, 1.0 - dup))))
+    n_by_type = np.maximum(1, np.round(mix * n_program)).astype(int)
+    per_type: list[list[dict]] = [[], [], []]
+    for btype, n in enumerate(n_by_type):
+        for _ in range(int(n)):
+            if btype == 0:      # regular
+                period = float(rng.choice([HOUR, 2 * HOUR, 6 * HOUR]))
+                window = period
+            elif btype == 1:    # real-time
+                period = MINUTE
+                window = MINUTE
+            else:               # overlapping
+                period = HOUR
+                window = k_overlap * HOUR
+            per_type[btype].append(
+                dict(
+                    behaviour=("regular", "realtime", "overlapping")[btype],
+                    period=period,
+                    window=window,
+                    n_streams=int(rng.integers(1, 4)),
+                )
+            )
+    # round-robin across types so truncation keeps type diversity
+    plans: list[dict] = []
+    for group in itertools_zip_longest(per_type):
+        plans.extend(p for p in group if p is not None)
+    return plans[:n_program] if len(plans) > n_program else plans
+
+
 class TraceGenerator:
     """Synthesize an access trace calibrated to a :class:`TraceProfile`.
 
@@ -175,40 +215,7 @@ class TraceGenerator:
     # -- program users ------------------------------------------------------
 
     def _program_user_plan(self, n_program: int) -> list[dict]:
-        """Assign each program user a behaviour.  User counts follow the
-        volume mix (more users where more volume); exact per-type volume
-        calibration is applied post-hoc in :meth:`generate` via per-type
-        stream-rate multipliers."""
-        p = self.profile
-        mix = _normalize(p.type_volume_mix)
-        dup = p.overlap_duplicate_frac
-        k_overlap = max(2, int(round(1.0 / max(1e-6, 1.0 - dup))))
-        n_by_type = np.maximum(1, np.round(mix * n_program)).astype(int)
-        per_type: list[list[dict]] = [[], [], []]
-        for btype, n in enumerate(n_by_type):
-            for _ in range(int(n)):
-                if btype == 0:      # regular
-                    period = float(self.rng.choice([HOUR, 2 * HOUR, 6 * HOUR]))
-                    window = period
-                elif btype == 1:    # real-time
-                    period = MINUTE
-                    window = MINUTE
-                else:               # overlapping
-                    period = HOUR
-                    window = k_overlap * HOUR
-                per_type[btype].append(
-                    dict(
-                        behaviour=("regular", "realtime", "overlapping")[btype],
-                        period=period,
-                        window=window,
-                        n_streams=int(self.rng.integers(1, 4)),
-                    )
-                )
-        # round-robin across types so truncation keeps type diversity
-        plans: list[dict] = []
-        for group in itertools_zip_longest(per_type):
-            plans.extend(p for p in group if p is not None)
-        return plans[:n_program] if len(plans) > n_program else plans
+        return _plan_program_users(self.profile, self.rng, n_program)
 
     def _gen_program_requests(
         self, user_id: int, plan: dict, continent: int
@@ -439,3 +446,256 @@ def make_trace(name: str, seed: int = 0, scale: float = 1.0) -> RequestList:
     if scale != 1.0:
         base = dataclasses.replace(base, n_users=max(8, int(base.n_users * scale)))
     return TraceGenerator(base, seed=seed).generate()
+
+
+# ---------------------------------------------------------------------------
+# Streaming trace path (paper-scale replay: 17.9M-77.8M requests)
+# ---------------------------------------------------------------------------
+
+
+class StreamingRequestSource:
+    """A restartable, windowed view of a request stream.
+
+    The replay engines accept this in place of a materialized
+    :class:`RequestList`: :meth:`windows` yields fixed-size
+    ``RequestList`` windows in timestamp order, re-creating the
+    underlying iterator from ``factory`` on every pass, so the full
+    trace is never held in memory and the same source can drive several
+    engine runs (equivalence audits included).
+
+    ``tr_bounds`` is an optional ``(tr_lo, tr_hi)`` bound on every
+    request's observation time-range.  The interval engine uses it to
+    fix its dense chunk-key address space up front (the key labels are a
+    pure renaming, so results are invariant to the exact bound — see
+    ``docs/ARCHITECTURE.md``); without it, streaming falls back to the
+    vector block replay's growable address space.
+    """
+
+    def __init__(self, factory: "Callable[[], Iterator[Request]]",
+                 window: int = 65536, n_requests: int | None = None,
+                 tr_bounds: tuple[float, float] | None = None):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self._factory = factory
+        self.window = int(window)
+        self.n_requests = n_requests
+        self.tr_bounds = tr_bounds
+
+    def __iter__(self) -> Iterator[Request]:
+        return self._factory()
+
+    def __bool__(self) -> bool:
+        return True
+
+    def __len__(self) -> int:
+        if self.n_requests is None:
+            raise TypeError("length of this streaming source is unknown")
+        return self.n_requests
+
+    def windows(self) -> "Iterator[RequestList]":
+        it = self._factory()
+        while True:
+            w = RequestList(itertools.islice(it, self.window))
+            if not w:
+                return
+            yield w
+
+    @classmethod
+    def from_requests(cls, requests: Sequence[Request],
+                      window: int = 65536) -> "StreamingRequestSource":
+        """Wrap an in-memory trace (tests: stream==materialize audits)."""
+        if requests:
+            lo = min(r.tr_start for r in requests)
+            hi = max(r.tr_end for r in requests)
+        else:
+            lo = hi = 0.0
+        return cls(lambda: iter(requests), window=window,
+                   n_requests=len(requests), tr_bounds=(lo, hi))
+
+
+class StreamingTraceSynthesizer:
+    """Generator-based trace synthesizer: yields requests in timestamp
+    order at arbitrary scale without materializing the trace.
+
+    Same behavioural model as :class:`TraceGenerator` (program plans via
+    the shared :func:`_plan_program_users`, identical per-request
+    arithmetic) restructured for streaming:
+
+    - every user gets an independent ``default_rng((seed, uid))`` stream,
+      so request values are independent of how user streams interleave
+      and of any window size;
+    - per-user streams are timestamp-sorted by construction (program
+      jitter is clipped to ±0.49·period; the few dozen requests of each
+      human user are buffered and sorted up front) and merged with
+      :func:`heapq.merge` — peak state is O(n_users), not O(n_requests);
+    - ``TraceGenerator``'s post-hoc global volume calibration is a
+      whole-trace pass and therefore *not* applied: the streaming
+      contract is determinism + exact prefix==materialize equality for
+      *this* synthesizer, not byte-equality with ``TraceGenerator``.
+
+    ``n_requests`` truncates the stream exactly; when ``duration`` is not
+    given it is solved from the plans' per-second request rates so the
+    stream comfortably covers ``n_requests`` (program request counts are
+    deterministic given the plans, so a small margin suffices).
+    """
+
+    _JITTER_CLIP = 0.49     # × period: preserves per-user ts monotonicity
+    _RATE_MARGIN = 1.05
+
+    def __init__(self, profile: TraceProfile, seed: int = 0,
+                 n_requests: int | None = None, n_users: int | None = None,
+                 duration: float | None = None):
+        self.profile = profile
+        self.seed = int(seed)
+        self.n_requests = n_requests
+        self.n_users = int(n_users) if n_users is not None else profile.n_users
+        master = np.random.default_rng(self.seed)
+        n_human = int(round(self.n_users * profile.human_user_frac))
+        self._n_program = self.n_users - n_human
+        self._plans = _plan_program_users(profile, master, self._n_program)
+        cont_p = _normalize(profile.continent_probs)
+        self._continents = [int(c) for c in
+                            master.choice(6, size=self.n_users, p=cont_p)]
+        self._obj_probs = _zipf_probs(profile.grid.n_objects, alpha=1.0)
+        self.duration = float(duration) if duration is not None \
+            else self._solve_duration(n_human)
+        # Humans are buffered eagerly: O(n_users) memory, and it makes
+        # tr_bounds exact (human sessions may run past `duration`).
+        self._human_buffers = [
+            self._gen_human(len(self._plans) + k,
+                            self._continents[len(self._plans) + k])
+            for k in range(n_human)
+        ]
+        tr_hi = self.duration + self._JITTER_CLIP * 6 * HOUR
+        for buf in self._human_buffers:
+            for r in buf:
+                if r.tr_end > tr_hi:
+                    tr_hi = r.tr_end
+        self.tr_bounds = (0.0, tr_hi)
+
+    # -- sizing --------------------------------------------------------------
+
+    def _solve_duration(self, n_human: int) -> float:
+        if self.n_requests is None:
+            return self.profile.duration
+        rate_reg = sum(pl["n_streams"] / pl["period"] for pl in self._plans
+                       if pl["behaviour"] != "realtime")
+        rate_rt = sum(pl["n_streams"] / pl["period"] for pl in self._plans
+                      if pl["behaviour"] == "realtime")
+        # humans contribute a duration-independent request count; use the
+        # worst-case draw (1 session × 3 requests) so the solved duration
+        # always errs long
+        target = self.n_requests * self._RATE_MARGIN - 3 * n_human
+        if target <= 0:
+            return self.profile.duration
+        span_rt = 3 * DAY       # real-time users subsample to this span
+        if rate_reg > 0 and \
+                (target - span_rt * rate_rt) / rate_reg >= span_rt:
+            d = (target - span_rt * rate_rt) / rate_reg
+        elif rate_reg + rate_rt > 0:
+            d = target / (rate_reg + rate_rt)
+        else:
+            raise ValueError(
+                "no program users: cannot size a duration to reach "
+                f"n_requests={self.n_requests}; raise n_users")
+        if rate_reg == 0 and d > span_rt:
+            raise ValueError(
+                f"real-time users cap out at {span_rt * rate_rt:.0f} "
+                f"requests; cannot reach n_requests={self.n_requests} — "
+                "raise n_users")
+        return max(HOUR, d)
+
+    # -- per-user streams ----------------------------------------------------
+
+    def _program_stream(self, uid: int, plan: dict,
+                        continent: int) -> Iterator[Request]:
+        p = self.profile
+        rng = np.random.default_rng((self.seed, uid))
+        period, window = plan["period"], plan["window"]
+        span = min(self.duration, 3 * DAY) \
+            if plan["behaviour"] == "realtime" else self.duration
+        start = float(rng.uniform(0, period))
+        objs = [int(o) for o in rng.choice(
+            p.grid.n_objects, size=plan["n_streams"], replace=False,
+            p=self._obj_probs)]
+        overlapping = plan["behaviour"] == "overlapping"
+        sigma = p.period_jitter_frac * period
+        jmax = self._JITTER_CLIP * period
+        bps = p.bytes_per_second_stream
+        last_end: dict[int, float] = {}
+        jit = np.empty(0)
+        j = 0
+        t = start
+        while t < span:
+            if j >= jit.shape[0]:
+                # block-drawn jitter: one numpy call per 512 ticks
+                jit = np.clip(rng.normal(0.0, sigma, 512), -jmax, jmax)
+                j = 0
+            ts = max(0.0, t + float(jit[j]))
+            j += 1
+            for obj in objs:
+                tr_end = ts
+                if overlapping:
+                    tr_start = max(0.0, ts - window)
+                else:
+                    tr_start = last_end.get(obj, max(0.0, ts - window))
+                    last_end[obj] = tr_end
+                size = int((tr_end - tr_start) * bps)
+                yield Request(ts, uid, obj, tr_start, tr_end, size, continent)
+            t += period
+
+    def _gen_human(self, uid: int, continent: int) -> list[Request]:
+        # mirrors TraceGenerator._gen_human_requests with a per-user rng
+        p = self.profile
+        g = p.grid
+        rng = np.random.default_rng((self.seed, uid))
+        n_sessions = int(rng.integers(1, 4))
+        out: list[Request] = []
+        type_pop = _zipf_probs(g.n_types)
+        for _ in range(n_sessions):
+            t0 = float(rng.uniform(0, self.duration))
+            loc = int(rng.integers(0, g.n_locs))
+            itype = int(rng.choice(g.n_types, p=type_pop))
+            n_req = int(rng.integers(3, 12))
+            t = t0
+            for _ in range(n_req):
+                if rng.random() < 0.5:
+                    itype = int(rng.choice(g.n_types, p=type_pop))
+                else:
+                    loc = int(np.clip(loc + rng.integers(-2, 3), 0, g.n_locs - 1))
+                obj = g.obj_id(itype, loc)
+                window = float(rng.choice([HOUR, 6 * HOUR, DAY]))
+                tr_end = float(rng.uniform(0, max(1.0, t - 1.0))) if t > 2 else t
+                tr_start = max(0.0, tr_end - window)
+                size = int((tr_end - tr_start) * p.bytes_per_second_stream * 0.1)
+                out.append(Request(t, uid, obj, tr_start, tr_end, size,
+                                   continent))
+                t += float(rng.exponential(120.0))
+        out.sort(key=lambda r: r.ts)
+        return out
+
+    # -- public API ----------------------------------------------------------
+
+    def iter_requests(self) -> Iterator[Request]:
+        """One pass over the stream, timestamp-sorted, truncated at
+        ``n_requests``.  Re-entrant: every call restarts from scratch and
+        yields the identical sequence."""
+        streams: list[Iterator[Request]] = [
+            self._program_stream(uid, plan, self._continents[uid])
+            for uid, plan in enumerate(self._plans)
+        ]
+        streams.extend(iter(buf) for buf in self._human_buffers)
+        merged = heapq.merge(*streams, key=lambda r: r.ts)
+        if self.n_requests is not None:
+            merged = itertools.islice(merged, self.n_requests)
+        return merged
+
+    def materialize(self, n: int | None = None) -> RequestList:
+        """The first ``n`` requests (all, if None) as a ``RequestList`` —
+        by construction the exact prefix of :meth:`iter_requests`."""
+        return RequestList(itertools.islice(self.iter_requests(), n))
+
+    def source(self, window: int = 65536) -> StreamingRequestSource:
+        return StreamingRequestSource(
+            self.iter_requests, window=window, n_requests=self.n_requests,
+            tr_bounds=self.tr_bounds)

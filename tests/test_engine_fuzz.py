@@ -30,7 +30,8 @@ import pytest
 
 from repro.core import SimConfig, run_strategy
 from repro.core.simulator import DEFAULT_BANDWIDTH_GBPS
-from repro.core.trace import ObjectGrid, Request, RequestList
+from repro.core.trace import (ObjectGrid, Request, RequestList,
+                              StreamingRequestSource)
 
 #: derandomized fuzz seed — recorded here per the acceptance criteria; any
 #: divergence reproduces with this seed alone (no hypothesis DB needed)
@@ -45,6 +46,10 @@ _U = 1 << 20
 
 
 def _int_counters(res):
+    # outcome_totals() sums per-request outcomes for materialized runs and
+    # returns the already-folded OutcomeAggregate for streamed runs, so the
+    # same tuple compares both input paths
+    agg = res.outcome_totals()
     return (
         res.origin_requests,
         res.total_requests,
@@ -55,11 +60,11 @@ def _int_counters(res):
             (d, s.hits, s.misses, s.hit_bytes, s.miss_bytes, s.evictions,
              s.inserted_bytes)
             for d, s in res.cache_stats.items())),
-        sum(o.local_bytes for o in res.outcomes),
-        sum(o.prefetched_bytes for o in res.outcomes),
-        sum(o.peer_bytes for o in res.outcomes),
-        sum(o.origin_bytes for o in res.outcomes),
-        sum(o.bytes for o in res.outcomes),
+        agg.local_bytes,
+        agg.prefetched_bytes,
+        agg.peer_bytes,
+        agg.origin_bytes,
+        agg.bytes,
     )
 
 
@@ -134,9 +139,11 @@ def gen_scenario(rng: random.Random):
     return grid, trace, cfg_kw
 
 
-def check_strategy(strategy, grid, trace, cfg_kw):
+def check_strategy(strategy, grid, trace, cfg_kw, window=None):
     """Replay one scenario through every engine (and, for static LRU
-    serving, through every interval route) and compare counters."""
+    serving, through every interval route) and compare counters — then do
+    it again through the windowed streaming source (``window`` requests at
+    a time; randomized by the sweeps), which must match bit-for-bit."""
     # ``interval_flat_state`` defaults to True, so the plain interval run
     # already sweeps the flat array-backed store; the False run pins the
     # Python-list reference store to the same counters (PR 7 bugfix bar)
@@ -157,14 +164,27 @@ def check_strategy(strategy, grid, trace, cfg_kw):
         assert got == want, (
             f"{engine} engine ({extra or 'default'}) diverged from the "
             f"reference under {strategy}: {got} != {want}")
+    w = window or max(1, len(trace) // 3)
+    src = StreamingRequestSource.from_requests(trace, window=w)
+    for engine, extra in [("reference", {})] + runs:
+        res = run_strategy(strategy, src, grid,
+                           SimConfig(**cfg_kw, **extra), None, engine=engine)
+        got = _int_counters(res)
+        assert got == want, (
+            f"{engine} engine ({extra or 'default'}) streamed with "
+            f"window={w} diverged from the reference under {strategy}: "
+            f"{got} != {want}")
 
 
 def _sweep(strategy: str, n_examples: int) -> None:
     for i in range(n_examples):
         rng = random.Random((FUZZ_SEED, strategy, i).__repr__())
         grid, trace, cfg_kw = gen_scenario(rng)
+        # drawn after the scenario so existing recorded scenarios replay
+        # identically; width 1 forces a window per request
+        window = rng.choice((1, 2, 3, 5, 9, 17))
         try:
-            check_strategy(strategy, grid, trace, cfg_kw)
+            check_strategy(strategy, grid, trace, cfg_kw, window=window)
         except AssertionError as e:
             raise AssertionError(
                 f"scenario {i} (seed base {FUZZ_SEED}) of strategy "
@@ -211,4 +231,5 @@ if HAVE_HYPOTHESIS:
         smallest failing sub-seed on divergence)."""
         rng = random.Random((FUZZ_SEED, strategy, sub_seed).__repr__())
         grid, trace, cfg_kw = gen_scenario(rng)
-        check_strategy(strategy, grid, trace, cfg_kw)
+        window = rng.choice((1, 2, 3, 5, 9, 17))
+        check_strategy(strategy, grid, trace, cfg_kw, window=window)

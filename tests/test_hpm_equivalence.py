@@ -203,6 +203,74 @@ def test_planner_matches_observe_seeded(trace):
     _assert_plan_equals_observe(tr[cut:], tr[:cut])
 
 
+# ---------------------------------------------------------------------------
+# window-split invariance (the streaming replay contract)
+# ---------------------------------------------------------------------------
+
+
+def _windowed_ops(test_reqs, cuts, txs):
+    """Feed ``test_reqs`` through a stateful planner in windows delimited by
+    ``cuts`` (sorted interior indices) and return the concatenated
+    per-request op lists."""
+    planner = BatchedHPMPlanner(HybridPrefetcher(rule_transactions=txs))
+    out: list = []
+    lo = 0
+    for hi in list(cuts) + [len(test_reqs)]:
+        out.extend(planner.plan_window(test_reqs[lo:hi]))
+        lo = hi
+    return out
+
+
+def _arima_fit_trace():
+    profile = dataclasses.replace(
+        OOI_PROFILE, name="ooi_arima", n_users=6, human_user_frac=0.2,
+        type_volume_mix=(0.9, 0.05, 0.05), period_jitter_frac=0.06,
+        duration=WEEK)
+    tr = TraceGenerator(profile, seed=3).generate()
+    cut = int(len(tr) * 0.3)
+    return tr[cut:], tr[:cut]
+
+
+def test_plan_window_invariant_under_any_split():
+    """Any window-boundary placement — width 1, whole-trace, or random cut
+    points — leaves the op stream bitwise identical to the online observe
+    reference.  Classification state is per-user-subsequence (windows
+    preserve order) and bank rows are batch-composition independent
+    (``test_bank_rows_independent_of_batch_composition``), so splits cannot
+    change a single op.  This is the prediction half of the streaming
+    replay exactness argument (``tests/test_streaming_replay.py``)."""
+    import random
+
+    test_reqs, train_reqs = _arima_fit_trace()
+    txs = build_rule_transactions(train_reqs)
+    online = HybridPrefetcher(rule_transactions=txs)
+    reference = [list(online.observe(r)) for r in test_reqs]
+    assert sum(map(len, reference)) > 0, "degenerate trace: no ops"
+    n = len(test_reqs)
+    splits = [list(range(1, n)), []]            # width 1, whole-trace
+    rng = random.Random(20260808)               # derandomized property draws
+    for _ in range(4):
+        k = rng.randint(1, 12)
+        splits.append(sorted(rng.sample(range(1, n), k)))
+    for cuts in splits:
+        got = [list(ops) for ops in _windowed_ops(test_reqs, cuts, txs)]
+        assert got == reference, f"op stream diverges for cuts={cuts[:8]}..."
+
+
+def test_plan_window_split_matches_whole_plan_seeded():
+    """On the seeded OOI trace a random two-window split must equal the
+    single-shot plan (which itself equals observe, pinned above)."""
+    tr = make_trace("ooi", seed=7, scale=0.035)
+    cut = int(len(tr) * 0.3)
+    test_reqs, train_reqs = tr[cut:], tr[:cut]
+    txs = build_rule_transactions(train_reqs)
+    whole = BatchedHPMPlanner(
+        HybridPrefetcher(rule_transactions=txs)).plan(test_reqs)
+    mid = len(test_reqs) // 3
+    split = _windowed_ops(test_reqs, [mid], txs)
+    assert [list(ops) for ops in whole] == [list(ops) for ops in split]
+
+
 def test_planner_matches_observe_with_arima_fits():
     """Jittered program periods (std/median > 2%) defeat the median fast
     path, so every history prediction goes through a real fit — the planner
