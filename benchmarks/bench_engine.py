@@ -126,6 +126,12 @@ SMOKE_SCENARIOS = [
     # non-zero exactly like an engine divergence
     ("ooi", "cache_only", 3600.0, 128 << 30, 0.08, 640),
     ("ooi_arima", "hpm", 3600.0, 128 << 30, 0.5, 640),
+    # the two FULL-scale 8 GB thrash rows (same shape as FULL_SCENARIOS):
+    # cheap enough for CI because capacity-bound truncation keeps every
+    # engine's block small, and they feed the committed-speedup floor
+    # guard at the end of main()
+    ("ooi", "cache_only", 3600.0, 8 << 30, 1.0),
+    ("gage", "cache_only", 3600.0, 8 << 30, 1.0),
 ]
 
 _SPLITS: dict = {}
@@ -170,6 +176,7 @@ def run_scenario(trace: str, strategy: str, chunk_seconds: float,
                 if window else test)
     best: dict[str, float] = {e: float("inf") for e in engines}
     counters: dict[str, tuple] = {}
+    evict_ctr: dict[str, dict] = {}
     for _ in range(reps):
         for engine in engines:
             gc.collect()
@@ -183,6 +190,9 @@ def run_scenario(trace: str, strategy: str, chunk_seconds: float,
                                engine=engine)
             best[engine] = min(best[engine], time.perf_counter() - t0)
             counters[engine] = _counters(res)
+            evict_ctr[engine] = dict(plan=res.evict_plan_calls,
+                                     trunc=res.block_truncations,
+                                     degen=res.degenerate_serves)
     if window:
         # windowed rows additionally audit against a materialized run (the
         # streaming==materialized contract, tests/test_streaming_replay.py)
@@ -217,6 +227,11 @@ def run_scenario(trace: str, strategy: str, chunk_seconds: float,
     for e in engines:
         row[f"{e}_rps"] = round(n / best[e], 1)
         row[f"{e}_seconds"] = round(best[e], 3)
+        if e != "reference":
+            # eviction-path telemetry (deterministic per engine/scenario):
+            # visible in smoke rows so plan/truncation-frequency regressions
+            # show up without a profiler
+            row[f"{e}_evict_ctr"] = evict_ctr[e]
     if "reference" in engines:
         for e in engines:
             if e != "reference":
@@ -236,7 +251,8 @@ def _geomean(vals: list[float]) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _full_trace_worker(engine: str, n_requests: int) -> None:
+def _full_trace_worker(engine: str, n_requests: int,
+                       trace: str = "ooi") -> None:
     """Subprocess body for one ``--full-trace`` row.
 
     The timed windowed replay runs first so ``ru_maxrss`` is this engine's
@@ -246,7 +262,7 @@ def _full_trace_worker(engine: str, n_requests: int) -> None:
     the streaming==materialized counter contract at this scale."""
     import resource
 
-    profile = OOI_PROFILE
+    profile = PROFILES[trace]
     synth = StreamingTraceSynthesizer(profile, seed=FULL_TRACE_SEED,
                                       n_requests=n_requests,
                                       n_users=FULL_TRACE_USERS)
@@ -284,7 +300,8 @@ def _full_trace_worker(engine: str, n_requests: int) -> None:
     print(json.dumps(row))
 
 
-def run_full_trace(n_requests: int, engines: list[str]) -> list[dict]:
+def run_full_trace(n_requests: int, engines: list[str],
+                   trace: str = "ooi") -> list[dict]:
     """Spawn one worker subprocess per engine and collect their rows."""
     src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                            "src"))
@@ -293,12 +310,12 @@ def run_full_trace(n_requests: int, engines: list[str]) -> list[dict]:
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     rows = []
     for engine in engines:
-        print(f"full-trace: {engine} x {n_requests:,} requests "
+        print(f"full-trace[{trace}]: {engine} x {n_requests:,} requests "
               f"(window={FULL_TRACE_WINDOW}) ...", flush=True)
         proc = subprocess.run(
             [sys.executable, os.path.abspath(__file__),
              "--_full-trace-worker", engine, "--full-trace",
-             str(n_requests)],
+             str(n_requests), "--full-trace-trace", trace],
             env=env, capture_output=True, text=True)
         if proc.returncode != 0:
             sys.stderr.write(proc.stdout)
@@ -327,6 +344,11 @@ def main() -> None:
                          f"{FULL_TRACE_DEFAULT:,}, the paper's OOI trace "
                          "size) through the windowed streaming path and "
                          "merge a full_trace row family into the JSON")
+    ap.add_argument("--full-trace-trace", dest="full_trace_trace",
+                    choices=("ooi", "gage"), default="ooi",
+                    help="trace profile for --full-trace rows: ooi (17.9M "
+                         "§V-A1 default) or gage (pair with --full-trace "
+                         "77800000 for the paper's GAGE trace size)")
     ap.add_argument("--_full-trace-worker", dest="full_trace_worker",
                     default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -340,7 +362,8 @@ def main() -> None:
 
     if args.full_trace_worker:
         _full_trace_worker(args.full_trace_worker,
-                           args.full_trace or FULL_TRACE_DEFAULT)
+                           args.full_trace or FULL_TRACE_DEFAULT,
+                           args.full_trace_trace)
         return
 
     if args.full_trace is not None:
@@ -349,13 +372,18 @@ def main() -> None:
         # engine set was given explicitly
         ft_engines = (engines if args.engines != ",".join(ENGINES)
                       else ["interval", "vector"])
-        ft_rows = run_full_trace(args.full_trace, ft_engines)
+        ft_rows = run_full_trace(args.full_trace, ft_engines,
+                                 args.full_trace_trace)
         data = {}
         if os.path.exists(path):
             with open(path) as f:
                 data = json.load(f)
-        data["full_trace"] = dict(
-            n_requests=args.full_trace, profile="ooi",
+        # each profile keeps its own row family so an OOI run never
+        # clobbers a recorded GAGE row (and vice versa)
+        ft_key = ("full_trace" if args.full_trace_trace == "ooi"
+                  else f"full_trace_{args.full_trace_trace}")
+        data[ft_key] = dict(
+            n_requests=args.full_trace, profile=args.full_trace_trace,
             n_users=FULL_TRACE_USERS, seed=FULL_TRACE_SEED,
             window=FULL_TRACE_WINDOW, audit_prefix=FULL_TRACE_AUDIT,
             strategy="cache_only", chunk_seconds=3600.0, cache_gb=128,
@@ -404,15 +432,18 @@ def main() -> None:
         out["serving_speedup_geomean"] = _geomean(
             [r["speedup"] for r in rows if r["serving"]])
         out["all_counters_match"] = all(r["counters_match"] for r in rows)
+    prev = {}
     if os.path.exists(path):
-        # keep a previously merged full_trace row family across matrix runs
+        # keep a previously merged full_trace row family across matrix
+        # runs; ``prev`` also feeds the committed-speedup floor guard below
         try:
             with open(path) as f:
                 prev = json.load(f)
-            if "full_trace" in prev:
-                out["full_trace"] = prev["full_trace"]
+            for k in ("full_trace", "full_trace_gage"):
+                if k in prev:
+                    out[k] = prev[k]
         except (json.JSONDecodeError, OSError):
-            pass
+            prev = {}
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {os.path.abspath(path)}")
@@ -441,6 +472,29 @@ def main() -> None:
         if floor_bad:
             print("FAIL: fused interval path fell below the vector engine "
                   f"on coarse-chunk rows: {', '.join(floor_bad)}",
+                  file=sys.stderr)
+            sys.exit(1)
+    if args.smoke and "reference" in engines and prev.get("mode") == "full":
+        # 8 GB thrash floor: the committed full-matrix speedups for the
+        # eviction-thrash rows are a regression contract for the eviction
+        # planner — fail the smoke run if either row's best-engine speedup
+        # falls below 0.9x of the committed value (grace for single-rep
+        # timing noise); rows are matched on their full scenario shape
+        committed = {(r["trace"], r["chunk_seconds"], r["cache_gb"],
+                      r["trace_scale"]): r.get("speedup")
+                     for r in prev.get("scenarios", [])}
+        thrash_bad = []
+        for r in rows:
+            if r["cache_gb"] != 8 or "window" in r or "speedup" not in r:
+                continue
+            floor = committed.get((r["trace"], r["chunk_seconds"],
+                                   r["cache_gb"], r["trace_scale"]))
+            if floor and r["speedup"] < 0.9 * floor:
+                thrash_bad.append(
+                    f"{r['trace']}: {r['speedup']}x < 0.9*{floor}x")
+        if thrash_bad:
+            print("FAIL: 8 GB thrash rows fell below the committed "
+                  f"BENCH_engine.json floor: {'; '.join(thrash_bad)}",
                   file=sys.stderr)
             sys.exit(1)
 

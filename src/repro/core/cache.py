@@ -261,6 +261,32 @@ class IntCacheState:
     # subclasses: touch_hits, insert_batch, upsert_batch, _evict_one, remap
 
 
+class _VecPlan:
+    """Speculative eviction plan over an :class:`IntLRUState` FIFO scan.
+
+    Holds candidate victims in exact eviction order with the stamps they
+    carried when scanned.  The plan is *self-validating*: a victim is
+    still a victim iff it is present with an unchanged stamp (re-touches
+    re-stamp, evictions clear presence, and re-inserts after eviction get
+    a newer stamp — a stale victim can never revalidate), so reuse only
+    needs a filter pass, no invalidation hooks on the mutation paths.
+    ``fgen`` guards the stored FIFO positions (``ends``/``pos``) against
+    queue compaction, which renumbers them.
+    """
+
+    __slots__ = ("vk", "vst", "vsz", "ends", "pos", "fgen", "total")
+
+    def __init__(self, pos: int, fgen: int):
+        z = np.empty(0, np.int64)
+        self.vk = z          # victim keys, eviction order
+        self.vst = z         # their stamps at scan time
+        self.vsz = z         # their sizes at scan time
+        self.ends = z        # FIFO position just past each victim
+        self.pos = pos       # scan frontier (next unscanned FIFO slot)
+        self.fgen = fgen
+        self.total = 0       # sum(vsz)
+
+
 class IntLRUState(IntCacheState):
     """Array LRU, result-equivalent to :class:`LRUCache`."""
 
@@ -274,6 +300,8 @@ class IntLRUState(IntCacheState):
         self._fk = np.empty(4096, np.int64)      # FIFO: keys
         self._head = 0
         self._tail = 0
+        self._plan: "_VecPlan | None" = None
+        self._fgen = 0
 
     # -- FIFO plumbing -------------------------------------------------------
 
@@ -294,6 +322,7 @@ class IntLRUState(IntCacheState):
         fk[:n] = ks[valid]
         self._fs, self._fk = fs, fk
         self._head, self._tail = 0, n
+        self._fgen += 1                  # stored FIFO positions renumbered
 
     def _fifo_append(self, stamps: "np.ndarray", keys: "np.ndarray") -> None:
         m = len(keys)
@@ -480,6 +509,85 @@ class IntLRUState(IntCacheState):
         ends = np.concatenate(end_parts)
         return vk, cum, ends
 
+    def plan_evictions_spec(self, need: int, blocked_mask: "np.ndarray"
+                            ) -> tuple["np.ndarray", "np.ndarray", "np.ndarray"]:
+        """:meth:`plan_evictions` through a reusable speculative plan.
+
+        Scans *past* blocked victims (over-planning ~2x ``need``) and keeps
+        the plan on the state, so the next call — after a block truncation,
+        an applied eviction, or a later block — revalidates the surviving
+        victims instead of rescanning the FIFO.  Returns the same
+        ``(victim_keys, cum_freed_bytes, entries_consumed_through)`` triple
+        truncated at the first *currently* blocked victim, so the result is
+        exactly a fresh :meth:`plan_evictions` scan: plan victims are kept
+        only while present with unchanged stamps, which is precisely the
+        FIFO records a fresh scan would accept over the scanned prefix.
+        """
+        p = self._plan
+        if p is None or p.fgen != self._fgen:
+            p = self._plan = _VecPlan(self._head, self._fgen)
+        while True:
+            if len(p.vk):
+                # drop consumed (behind the queue head) and stale victims
+                val = (p.ends > self._head) & self.present[p.vk] \
+                    & (self.stamp[p.vk] == p.vst)
+                if not val.all():
+                    p.vk = p.vk[val]
+                    p.vst = p.vst[val]
+                    p.vsz = p.vsz[val]
+                    p.ends = p.ends[val]
+                    p.total = int(p.vsz.sum())
+            nvk = len(p.vk)
+            stop = nvk
+            if nvk:
+                amb = blocked_mask[p.vk]
+                if amb.any():
+                    stop = int(np.argmax(amb))
+            cum = p.vsz[:stop].cumsum()
+            freed = int(cum[-1]) if stop else 0
+            if freed >= need or stop < nvk or p.pos >= self._tail:
+                return p.vk[:stop], cum, p.ends[:stop]
+            self._plan_scan_vec(p, need)
+
+    def _plan_scan_vec(self, p: "_VecPlan", need: int) -> None:
+        """Extend a plan's victim list from its scan frontier until the
+        planned bytes reach ~2x ``need`` or the FIFO is exhausted.  Pure
+        except for the head-stale drop :meth:`plan_evictions` also does."""
+        t = self._tail
+        target = 2 * need
+        pos = p.pos
+        vk_parts: list[np.ndarray] = []
+        st_parts: list[np.ndarray] = []
+        sz_parts: list[np.ndarray] = []
+        end_parts: list[np.ndarray] = []
+        got = 0
+        while pos < t and p.total + got < target:
+            e = min(pos + 2048, t)
+            kk = self._fk[pos:e]
+            val = self.present[kk] & (self.stamp[kk] == self._fs[pos:e])
+            if pos == self._head:
+                # an empty plan at the queue head: permanently drop leading
+                # stale records, exactly like plan_evictions (a nonempty
+                # plan implies pos > head, so this never skips plan victims)
+                lead = int(np.argmax(val)) if val.any() else len(val)
+                self._head += lead
+            vi = val.nonzero()[0]
+            if len(vi):
+                kv = kk[vi]
+                vk_parts.append(kv)
+                st_parts.append(self.stamp[kv].copy())
+                sz_parts.append(self.size[kv])
+                end_parts.append(pos + vi + 1)
+                got += int(sz_parts[-1].sum())
+            pos = e
+        p.pos = pos
+        if vk_parts:
+            p.vk = np.concatenate([p.vk] + vk_parts)
+            p.vst = np.concatenate([p.vst] + st_parts)
+            p.vsz = np.concatenate([p.vsz] + sz_parts)
+            p.ends = np.concatenate([p.ends] + end_parts)
+            p.total += got
+
     def apply_evictions(self, victim_keys: "np.ndarray", cum_freed: "np.ndarray",
                         entries_end: "np.ndarray", n: int) -> None:
         """Commit the first ``n`` planned evictions (exact reference order)."""
@@ -536,6 +644,7 @@ class IntLRUState(IntCacheState):
     def remap(self, mapper, n_keys_new: int, present_new: "np.ndarray") -> None:
         """Re-key all state after the engine grows its chunk-address space.
         ``mapper`` maps old key arrays to new keys (a pure renaming)."""
+        self._plan = None                        # plan victims hold old keys
         idx = np.nonzero(self.present)[0]
         nidx = mapper(idx)
         size = np.zeros(n_keys_new, np.int64)
@@ -695,6 +804,110 @@ def make_int_cache_state(policy: str, capacity_bytes: int, n_keys: int,
 #   needed — the reference's one-chunk-at-a-time loop, run arithmetically.
 
 
+class EvictPlan:
+    """Speculative eviction plan shared by the interval cache states
+    (:class:`IntervalLRUState` and
+    :class:`repro.core.interval_store.FlatIntervalState`).
+
+    Holds the candidate victim *runs* of the owner's FIFO scan, in exact
+    LRU eviction order, with per-run and cumulative byte prices.  Built by
+    ``get_evict_plan(max_need)``, which over-plans ~2x ``max_need`` so one
+    scan serves several block-truncation queries (and, on the flat state,
+    the evictions that later consume the planned prefix).
+
+    Validity contract (the owner enforces it with guards): a plan may be
+    consulted only while **no mutation has touched a planned victim run**
+    — commits or touches overlapping ``[vs, ve)`` drop the plan, and
+    evictions either consume the plan in order (flat state) or drop it.
+    Under that invariant the plan prefix is exactly what a fresh FIFO scan
+    would find, because untouched runs keep their record ids and byte
+    prices, and the FIFO order of the scanned records cannot change.
+
+    ``ks``/``ke`` are start-sorted copies of the victim runs for overlap
+    stabs (disjoint runs, so ends are sorted too).  They are rebuilt on
+    extension but deliberately left stale after a partial consume: a
+    consumed run can then only cause a *spurious* invalidation (safe),
+    never a missed one.
+    """
+
+    __slots__ = ("owner", "vs", "ve", "vobj", "vrec", "segb", "cumb",
+                 "total", "pos", "fgen", "flen", "exhausted", "ks", "ke",
+                 "kmin", "kmax")
+
+    def __init__(self, owner):
+        self.owner = owner
+        z = np.empty(0, np.int64)
+        self.vs = z          # victim run starts (global keys), LRU order
+        self.ve = z          # victim run ends
+        self.vobj = None     # per-run object ids (list state only)
+        self.vrec = z        # per-run FIFO record position (flat state)
+        self.segb = z        # per-run bytes
+        self.cumb = z        # cumulative bytes
+        self.total = 0
+        self.pos = 0         # scan frontier (flat state FIFO index)
+        self.fgen = 0        # owner FIFO generation at build (flat state)
+        self.flen = 0        # owner FIFO length at build (list state)
+        self.exhausted = False   # the scan consumed the whole FIFO
+        self.ks = z
+        self.ke = z
+        self.kmin = 0
+        self.kmax = 0
+
+    def _index(self) -> None:
+        order = np.argsort(self.vs, kind="stable")
+        self.ks = self.vs[order]
+        self.ke = self.ve[order]
+        if len(self.ks):
+            self.kmin = int(self.ks[0])
+            self.kmax = int(self.ke[-1])
+        else:
+            self.kmin = self.kmax = 0
+
+    def overlaps(self, lo: int, hi: int) -> bool:
+        """Does ``[lo, hi)`` overlap any (possibly already consumed)
+        planned victim run?  Start-sorted disjoint runs have sorted ends,
+        so one stab decides."""
+        if hi <= self.kmin or lo >= self.kmax:
+            return False
+        i = int(self.ks.searchsorted(hi, side="left"))
+        return i > 0 and int(self.ke[i - 1]) > lo
+
+    def clean_before(self, max_need: int, blocked_starts,
+                     blocked_ends) -> int:
+        """Bytes freeable in exact LRU order before the first planned
+        victim chunk inside a blocked run, clamped at ``max_need`` — the
+        ``plan_evict_clean`` result.  Well-defined whenever the plan
+        satisfies ``total >= max_need`` or is exhausted: any such plan
+        gives the same answer as the full scan, because the answer only
+        depends on the victim prefix up to the first cut or the
+        ``max_need`` clamp, whichever comes first."""
+        vs, ve = self.vs, self.ve
+        if len(vs) == 0:
+            return min(self.total, max_need)
+        bs = blocked_starts if isinstance(blocked_starts, np.ndarray) \
+            else np.asarray(blocked_starts, np.int64)
+        be = blocked_ends if isinstance(blocked_ends, np.ndarray) \
+            else np.asarray(blocked_ends, np.int64)
+        nb = len(bs)
+        if nb == 0:
+            return min(self.total, max_need)
+        bi = bs.searchsorted(vs, side="right") - 1
+        covered = (bi >= 0) & (be[np.maximum(bi, 0)] > vs)
+        cand = np.where(bi + 1 < nb, bs[np.minimum(bi + 1, nb - 1)],
+                        np.iinfo(np.int64).max)
+        stop = np.minimum(ve, cand)
+        ci = (covered | (stop < ve)).nonzero()[0]
+        if not len(ci):
+            return min(self.total, max_need)
+        fb = int(ci[0])
+        base = int(self.cumb[fb - 1]) if fb > 0 else 0
+        if not covered[fb]:
+            obj = int(self.vobj[fb]) if self.vobj is not None else -1
+            base += self.owner._plan_seg_bytes(obj, int(vs[fb]),
+                                               int(stop[fb]))
+        return min(base, max_need)
+
+
 class IntervalLRUState:
     """LRU cache state over dense int chunk keys, held as sorted disjoint
     ``[start, end)`` intervals.  Result-equivalent to :class:`LRUCache` /
@@ -757,6 +970,9 @@ class IntervalLRUState:
         self._zmemo: dict[int, tuple] = {}
         self._fifo: collections.deque = collections.deque()
         self._next_rid = 1
+        # speculative eviction plan (EvictPlan) — dropped by any mutation
+        # that could touch a planned victim run
+        self._plan: "EvictPlan | None" = None
         # counters (CacheStats-compatible)
         self.hits = 0
         self.misses = 0
@@ -940,6 +1156,7 @@ class IntervalLRUState:
         """Evict chunks in exact LRU order until ``used + size`` fits.
         Mirrors the reference's one-chunk-at-a-time loop arithmetically:
         per victim size run, evict ``ceil(shortfall / chunk_size)`` chunks."""
+        self._plan = None          # deque pops invalidate scan positions
         fifo = self._fifo
         live = self._rid_live
         while self.used + size > self.capacity:
@@ -1056,6 +1273,65 @@ class IntervalLRUState:
             return ss_l[0], ee_l[0]
         return np.concatenate(ss_l), np.concatenate(ee_l)
 
+    def _plan_seg_bytes(self, obj: int, s: int, stop: int) -> int:
+        """Bytes of the present run ``[s, stop)`` of ``obj`` (size-map
+        walk; the run is fully covered)."""
+        zs, ze, zz = self._sizes[obj]
+        zi = self._overlap_start(zs, ze, s)
+        freed = 0
+        p = s
+        while p < stop:
+            pe = ze[zi] if ze[zi] < stop else stop
+            freed += (pe - p) * zz[zi]
+            p = pe
+            zi += 1
+        return freed
+
+    def get_evict_plan(self, max_need: int) -> "EvictPlan":
+        """The state's speculative eviction plan (see :class:`EvictPlan`),
+        guaranteed to either cover ``>= max_need`` bytes or be exhausted.
+        A cached plan is reused when it still meets that bar; the list
+        state rebuilds otherwise (no incremental extension — deque scan
+        positions are not stable enough to resume from)."""
+        p = self._plan
+        if p is not None and (p.total >= max_need or
+                              (p.exhausted and
+                               len(self._fifo) == p.flen)):
+            return p
+        vs_l: list[int] = []
+        ve_l: list[int] = []
+        vobj_l: list[int] = []
+        segb_l: list[int] = []
+        total = 0
+        target = 2 * max_need
+        exhausted = True
+        for rec in self._fifo:
+            if total >= target:
+                exhausted = False
+                break
+            rid, obj, lo, hi, _src = rec
+            if rid not in self._rid_live:
+                continue
+            for s, e in self._valid_segs(rid, obj, lo, hi):
+                b = self._plan_seg_bytes(obj, s, e)
+                vs_l.append(s)
+                ve_l.append(e)
+                vobj_l.append(obj)
+                segb_l.append(b)
+                total += b
+        p = EvictPlan(self)
+        p.vs = np.asarray(vs_l, np.int64)
+        p.ve = np.asarray(ve_l, np.int64)
+        p.vobj = np.asarray(vobj_l, np.int64)
+        p.segb = np.asarray(segb_l, np.int64)
+        p.cumb = p.segb.cumsum()
+        p.total = total
+        p.exhausted = exhausted
+        p.flen = len(self._fifo)
+        p._index()
+        self._plan = p
+        return p
+
     def plan_evict_clean(self, max_need: int, blocked_starts: list,
                          blocked_ends: list) -> int:
         """Dry-run the eviction scan: bytes freeable in exact LRU order
@@ -1063,42 +1339,23 @@ class IntervalLRUState:
         disjoint key runs), clamped at ``max_need`` — the last scanned run
         is consumed whole, so without the clamp the tally could overshoot
         the cap mid-run and leak scan-order detail into the result.  Pure —
-        walks the FIFO and both maps without mutating them.  The fused
-        block replay uses the result to truncate a block so that its
-        committed inserts can never evict a key the block itself references
-        (which keeps the block-start snapshot valid for every in-block hit,
-        dup and peer decision); it only ever compares the result against
-        the shortfall ``max_need``, so the clamp is contract-neutral at
-        that call site."""
-        freed = 0
-        nb = len(blocked_starts)
-        for rec in self._fifo:
-            rid, obj, lo, hi, _src = rec
-            if rid not in self._rid_live:
-                continue
-            zs, ze, zz = self._sizes[obj]
-            for s, e in self._valid_segs(rid, obj, lo, hi):
-                i = bisect.bisect_right(blocked_starts, s) - 1
-                if i >= 0 and blocked_ends[i] > s:
-                    return freed               # next victim chunk blocked
-                j = i + 1
-                stop = e
-                if j < nb and blocked_starts[j] < e:
-                    stop = blocked_starts[j]
-                zi = self._overlap_start(zs, ze, s)
-                p = s
-                while p < stop:
-                    pe = ze[zi] if ze[zi] < stop else stop
-                    freed += (pe - p) * zz[zi]
-                    p = pe
-                    zi += 1
-                if freed >= max_need:
-                    return max_need            # clamp the mid-run overshoot
-                if stop < e:
-                    return freed               # rest of this run blocked
-        return freed
+        answered from the state's speculative :class:`EvictPlan`, which
+        persists across calls (block truncations re-query with shrinking
+        needs, and the scan is the thrash-regime floor).  The fused block
+        replay uses the result to truncate a block so that its committed
+        inserts can never evict a key the block itself references (which
+        keeps the block-start snapshot valid for every in-block hit, dup
+        and peer decision); it only ever compares the result against the
+        shortfall ``max_need``, so the clamp is contract-neutral at that
+        call site."""
+        max_need = int(max_need)
+        if max_need <= 0:
+            return 0
+        return self.get_evict_plan(max_need).clean_before(
+            max_need, blocked_starts, blocked_ends)
 
-    def commit_block(self, size_recs: list, recency_recs: list) -> None:
+    def commit_block(self, size_recs: list, recency_recs: list,
+                     r_grp: "list | None" = None) -> None:
         """Bulk-commit one fused replay block.
 
         ``size_recs``: ``(obj, lo, hi, req_pos, size)`` insert runs merged
@@ -1117,12 +1374,29 @@ class IntervalLRUState:
         by one because only each chunk's *final* stamp is observable: the
         caller truncates blocks so no in-block key is evicted mid-block,
         and intermediate stamps of multiply-touched chunks are therefore
-        never consulted."""
+        never consulted.
+
+        ``r_grp`` (non-log mode): group ids, parallel to
+        ``recency_recs``, contiguous and non-decreasing — records in one
+        group (same DTN-object group, consecutive final stamps, ascending
+        disjoint key runs) are fused under ONE record id and ONE FIFO
+        record spanning first-lo..last-hi.  Exact because (a) a record's
+        valid runs are consumed in ascending key order, which equals
+        popping the per-run records consecutively, (b) the fused records
+        occupy the same relative FIFO positions, and (c) keys in the gaps
+        between a group's runs carry other rids and are filtered out by
+        rid validity wherever the record is consulted."""
         log = self._log
         oh = self.obj_hi
         objs = self._objs
         sizes = self._sizes
         zmemo = self._zmemo
+        p = self._plan
+        if p is not None:
+            for obj, a, b, _src in recency_recs:
+                if p.overlaps(a, b):
+                    self._plan = None   # re-touch of a planned victim
+                    break
         for obj, a, b, src, size in size_recs:
             zmemo.pop(obj, None)
             zmap = sizes.get(obj)
@@ -1140,14 +1414,36 @@ class IntervalLRUState:
                 self.miss_log.append((src, a, b))
                 self.insert_log.append((src, a, b))
         fifo = self._fifo
-        for obj, a, b, src in recency_recs:
+        if r_grp is None:
+            for obj, a, b, src in recency_recs:
+                rid = self._next_rid
+                self._next_rid = rid + 1
+                fifo.append((rid, obj, a, b, src))
+                self._splice_r(objs[obj], a, b, [[a], [b], [rid]])
+                if log and src >= 0:
+                    self._req_records.setdefault(src, []).append(
+                        (rid, obj, a, b))
+            return
+        k = 0
+        n = len(recency_recs)
+        while k < n:
+            g = r_grp[k]
+            j = k + 1
+            while j < n and r_grp[j] == g:
+                j += 1
             rid = self._next_rid
             self._next_rid = rid + 1
-            fifo.append((rid, obj, a, b, src))
-            self._splice_r(objs[obj], a, b, [[a], [b], [rid]])
+            obj, a0, b0, src0 = recency_recs[k]
+            hi_last = recency_recs[j - 1][2]
+            src = src0 if j == k + 1 else -1
+            fifo.append((rid, obj, a0, hi_last, src))
+            m = objs[obj]
+            for _o, a, b, _s in recency_recs[k:j]:
+                self._splice_r(m, a, b, [[a], [b], [rid]])
             if log and src >= 0:
                 self._req_records.setdefault(src, []).append(
-                    (rid, obj, a, b))
+                    (rid, obj, a0, b0))
+            k = j
 
     # -- serving -------------------------------------------------------------
 
@@ -1162,6 +1458,9 @@ class IntervalLRUState:
         reference's order)."""
         if hi <= lo:
             return 0, ()
+        p = self._plan
+        if p is not None and p.overlaps(lo, hi):
+            self._plan = None      # touch may re-stamp a planned victim
         m = self._objs.get(obj)
         if m is None:
             m = self._objs[obj] = [[], [], []]

@@ -161,6 +161,9 @@ class VectorVDCSimulator:
         self._pref2d: np.ndarray | None = None
         self._pref_issued = 0
         self._pref_used = 0
+        # eviction-path telemetry (ISSUE 9): speculative plan calls, block
+        # truncations at eviction pressure, scalar fallback serves
+        self._ctr = {"plan": 0, "trunc": 0, "degen": 0}
 
     def _origin_dur(self, nbytes: float, dtn: int) -> float:
         """Origin-link wire time, with the reference's zero-bandwidth
@@ -273,6 +276,9 @@ class VectorVDCSimulator:
             prefetch_used_chunks=self._pref_used,
             cache_stats=stats,
             stream_pushes=stream_engine.pushes_emitted if stream_engine else 0,
+            evict_plan_calls=self._ctr["plan"],
+            block_truncations=self._ctr["trunc"],
+            degenerate_serves=self._ctr["degen"],
         )
 
     def _prep_window(self, arr, hint: tuple[int, int] | None = None,
@@ -408,6 +414,9 @@ class VectorVDCSimulator:
             cache_stats=stats,
             stream_pushes=stream_engine.pushes_emitted if stream_engine else 0,
             aggregate=agg,
+            evict_plan_calls=self._ctr["plan"],
+            block_truncations=self._ctr["trunc"],
+            degenerate_serves=self._ctr["degen"],
         )
 
     # -- static fast path (no dynamic events) --------------------------------
@@ -443,6 +452,7 @@ class VectorVDCSimulator:
                 # classification keeps getting invalidated by in-block
                 # evictions, so replay a stretch per-request before retrying
                 stop = min(i + 256, n_req)
+                self._ctr["degen"] += stop - i
                 while i < stop:
                     self._serve_event(i, now_l[i], dtn_l[i], False, False)
                     i += 1
@@ -508,8 +518,9 @@ class VectorVDCSimulator:
                     total = int(cum_ins[-1])
                     if total <= room:
                         continue
-                    vk, cumf, ends = cache.plan_evictions(total - room,
-                                                          self._blk_mark)
+                    self._ctr["plan"] += 1
+                    vk, cumf, ends = cache.plan_evictions_spec(
+                        total - room, self._blk_mark)
                     clean = int(cumf[-1]) if len(cumf) else 0
                     if clean + room < total:
                         over = cum_ins > room + clean
@@ -541,8 +552,14 @@ class VectorVDCSimulator:
                     i, b, p_end, req_rep, keys, dtns, flat, true_hit,
                     order_f, newrun, now_l, dtn_l)
             if b < j:
+                self._ctr["trunc"] += 1
+                self._ctr["degen"] += 1
                 self._serve_event(b, now_l[b], dtn_l[b], False, False)
-                block = min(65536, max(64, 2 * (b - i + 1)))
+                # capacity-bound truncation repeats at ~the same block size;
+                # regrow with 25% headroom (not 2x) so the next block's
+                # classification work is mostly kept, not re-truncated away
+                kept = b - i + 1
+                block = min(65536, max(64, kept + (kept >> 2)))
                 degenerate = degenerate + 1 if b - i < 8 else 0
                 i = b + 1
             else:
@@ -1268,7 +1285,8 @@ _FUSED_MAX_INCIDENCE = 1 << 21
 def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                         pos_a: np.ndarray, dtn_a: np.ndarray,
                         obj_a: np.ndarray, lo_a: np.ndarray,
-                        hi_a: np.ndarray, pc_a: np.ndarray):
+                        hi_a: np.ndarray, pc_a: np.ndarray,
+                        ctr: dict | None = None):
     """Fused replay of one request sequence (trace order) over per-DTN
     :class:`IntervalLRUState` caches.
 
@@ -1283,6 +1301,8 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
       the state for phase B; returns ``None``.
     """
     n = len(pos_a)
+    if ctr is None:
+        ctr = {"plan": 0, "trunc": 0, "degen": 0}
     n_dtn = max(states) + 1
     cap = next(iter(states.values())).capacity
     active = sorted(states)
@@ -1306,6 +1326,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             cands[d] = cl
 
     def serve_scalar(r: int) -> None:
+        ctr["degen"] += 1
         d = int(dtn_a[r]); o = int(obj_a[r])
         lo = int(lo_a[r]); hi = int(hi_a[r])
         pc = int(pc_a[r]); ridx = int(pos_a[r])
@@ -1368,10 +1389,12 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             blk = 512
             continue
         j = min(n, i + blk)
-        was_trunc = False
         cap_nb = 0
         while True:
             # ---- elementary-cell decomposition of [i, j) ------------------
+            # computed ONCE per block; eviction-pressure truncation below
+            # only re-derives the plan inputs on the kept prefix (cells,
+            # snapshots and first-touch attribution are all prefix-stable)
             B = j - i
             lo = lo_a[i:j]; hi = hi_a[i:j]
             dt_b = dtn_a[i:j]; pc_b = pc_a[i:j]
@@ -1402,94 +1425,132 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                     j = i + nb
                     cap_nb = nb
                     continue
-            I = int(cum[-1])
-            M = len(C) - 1
-            cell_len = C[1:] - C[:-1]
-            inc = np.arange(B).repeat(cnt)
-            cell = np.arange(I) - (cum - cnt - rs).repeat(cnt)
-            # ---- snapshot presence + first/last attribution ---------------
-            clo = C[:-1]
-            snap = np.zeros((n_dtn, M), bool)
-            for d in active:
-                cs, ce = covs[d]
-                if len(cs):
-                    ix = cs.searchsorted(clo, side="right") - 1
-                    ok = ix >= 0
-                    snap[d, ok] = ce[ix[ok]] > clo[ok]
-            first2 = np.full((n_dtn, M), BIG, np.int64)
-            last2 = np.full((n_dtn, M), -1, np.int64)
-            d_inc = dt_b[inc]
-            # ``inc`` ascends, and duplicate fancy-index writes land
-            # last-wins: a forward scatter leaves each (DTN, cell)'s last
-            # toucher, a reversed scatter its first — no per-DTN sort.
-            # The reversed index arrays must be materialized: setitem walks
-            # index arrays in memory order, and a negative-stride view
-            # would silently restore the forward write order.
-            last2[d_inc, cell] = inc
-            first2[np.ascontiguousarray(d_inc[::-1]),
-                   np.ascontiguousarray(cell[::-1])] = (
-                       np.ascontiguousarray(inc[::-1]))
-            duniq: dict[int, tuple] = {}
-            for d in active:
-                row = last2[d]
-                uc = (row >= 0).nonzero()[0]  # ascending touched cells
-                if len(uc):
-                    duniq[d] = (uc, first2[d, uc], row[uc])
-            snap_inc = snap[d_inc, cell]
-            first_inc = first2[d_inc, cell]
-            hit = snap_inc | (first_inc < inc)
-            ins_idx = (~hit).nonzero()[0]     # first-touch absent cells
-            ins_inc = inc[ins_idx]
-            ins_cell = cell[ins_idx]
-            ins_d = d_inc[ins_idx]
-            ins_len = cell_len[ins_cell]
-            ins_bytes = ins_len * pc_b[ins_inc]
-            # ---- eviction planning + block truncation ---------------------
-            b_trunc = B
-            over_big = (pc_b > cap).nonzero()[0]
+            break
+        I = int(cum[-1])
+        M = len(C) - 1
+        cell_len = C[1:] - C[:-1]
+        inc = np.arange(B).repeat(cnt)
+        cell = np.arange(I) - (cum - cnt - rs).repeat(cnt)
+        # ---- snapshot presence + first-touch attribution ------------------
+        clo = C[:-1]
+        snap = np.zeros((n_dtn, M), bool)
+        for d in active:
+            cs, ce = covs[d]
+            if len(cs):
+                ix = cs.searchsorted(clo, side="right") - 1
+                ok = ix >= 0
+                snap[d, ok] = ce[ix[ok]] > clo[ok]
+        first2 = np.full((n_dtn, M), BIG, np.int64)
+        d_inc = dt_b[inc]
+        # ``inc`` ascends, and duplicate fancy-index writes land last-wins,
+        # so a reversed scatter leaves each (DTN, cell)'s FIRST toucher —
+        # no per-DTN sort.  The reversed index arrays must be materialized:
+        # setitem walks index arrays in memory order, and a negative-stride
+        # view would silently restore the forward write order.  First
+        # touchers are prefix-stable: a cell touched by request r has
+        # first <= r, so every truncated prefix below reuses this scatter.
+        first2[np.ascontiguousarray(d_inc[::-1]),
+               np.ascontiguousarray(cell[::-1])] = (
+                   np.ascontiguousarray(inc[::-1]))
+        snap_inc = snap[d_inc, cell]
+        first_inc = first2[d_inc, cell]
+        hit = snap_inc | (first_inc < inc)
+        ins_idx = (~hit).nonzero()[0]     # first-touch absent cells
+        ins_inc = inc[ins_idx]            # non-decreasing (inc ascends)
+        ins_cell = cell[ins_idx]
+        ins_d = d_inc[ins_idx]
+        ins_len = cell_len[ins_cell]
+        ins_bytes = ins_len * pc_b[ins_inc]
+        # ---- eviction planning + prefix refinement ------------------------
+        # iterate to the same fixpoint as a full re-decomposition would:
+        # every refinement round re-plans on prefix-exact inputs (blocked
+        # key union, per-request insert bytes), and plan_evict_clean reuses
+        # its speculative plan across rounds, so a truncation costs
+        # O(prefix) instead of a fresh block scan
+        was_trunc = False
+        b_cur = B
+        evict_plan: dict[int, tuple] = {}
+        while True:
+            b_new = b_cur
+            over_big = (pc_b[:b_cur] > cap).nonzero()[0]
             if len(over_big):
                 # the reference silently skips oversized inserts; serve the
                 # request scalarly so later touches of its keys stay misses
-                b_trunc = int(over_big[0])
-            evict_plan: dict[int, tuple] = {}
-            if b_trunc:
-                # the flat state takes the blocked key runs as arrays; the
-                # list state wants Python lists (bisect)
-                bs_l = (us, ue) if flat else (us.tolist(), ue.tolist())
-                for d in active:
-                    m_ = ins_d == d
-                    if not m_.any():
-                        continue
-                    st = states[d]
-                    bb = np.bincount(ins_inc[m_], weights=ins_bytes[m_],
-                                     minlength=B).astype(np.int64)
-                    cum_d = bb.cumsum()
-                    room = st.capacity - st.used
-                    total = int(cum_d[-1])
-                    if total <= room:
-                        continue
-                    # contract: the result is only compared against the
-                    # byte shortfall (total - room) and clamped there —
-                    # plan_evict_clean may cap its answer at max_need, and
-                    # any overshoot past it must never change b_trunc
-                    clean = st.plan_evict_clean(total - room, *bs_l)
-                    evict_plan[d] = (bb, cum_d)
-                    if total > room + clean:
-                        b_trunc = min(b_trunc, int(cum_d.searchsorted(
-                            room + clean, side="right")))
-            if b_trunc < B:
+                b_new = int(over_big[0])
+            evict_plan = {}
+            if b_new:
+                ni = int(ins_inc.searchsorted(b_new))
+                if ni:
+                    if b_new == B:
+                        us_c, ue_c = us, ue
+                    else:
+                        us_c, ue_c = _merge_key_runs(lo[:b_new], hi[:b_new])
+                    # the flat state takes the blocked key runs as arrays;
+                    # the list state wants Python lists (bisect)
+                    bs_l = ((us_c, ue_c) if flat
+                            else (us_c.tolist(), ue_c.tolist()))
+                    ii_ = ins_inc[:ni]
+                    ib_ = ins_bytes[:ni]
+                    id_ = ins_d[:ni]
+                    for d in active:
+                        m_ = id_ == d
+                        if not m_.any():
+                            continue
+                        st = states[d]
+                        bb = np.bincount(ii_[m_], weights=ib_[m_],
+                                         minlength=b_new).astype(np.int64)
+                        cum_d = bb.cumsum()
+                        room = st.capacity - st.used
+                        total = int(cum_d[-1])
+                        if total <= room:
+                            continue
+                        # contract: the result is only compared against the
+                        # byte shortfall (total - room) and clamped there —
+                        # plan_evict_clean may cap its answer at max_need,
+                        # and any overshoot past it must never change b_new
+                        ctr["plan"] += 1
+                        clean = st.plan_evict_clean(total - room, *bs_l)
+                        evict_plan[d] = (bb, cum_d)
+                        if total > room + clean:
+                            b_new = min(b_new, int(cum_d.searchsorted(
+                                room + clean, side="right")))
+            if b_new < b_cur:
                 was_trunc = True
-                if b_trunc == 0:
+                ctr["trunc"] += 1
+                b_cur = b_new
+                if b_cur == 0:
                     break
-                j = i + b_trunc
                 continue
             break
-        if b_trunc == 0:
+        if b_cur == 0:
             serve_scalar(i)
             i += 1
             degen += 1
             blk = max(256, blk >> 1)
             continue
+        j = i + b_cur
+        if b_cur < B:
+            # slice every per-incidence column to the kept prefix; the
+            # decomposition, snapshots and first-touch scatter are reused
+            e_i = int(cum[b_cur - 1])
+            B = b_cur
+            inc = inc[:e_i]; cell = cell[:e_i]; d_inc = d_inc[:e_i]
+            hit = hit[:e_i]
+            ni = int(ins_inc.searchsorted(b_cur))
+            ins_idx = ins_idx[:ni]; ins_inc = ins_inc[:ni]
+            ins_cell = ins_cell[:ni]; ins_d = ins_d[:ni]
+            ins_len = ins_len[:ni]; ins_bytes = ins_bytes[:ni]
+            dt_b = dt_b[:b_cur]; pc_b = pc_b[:b_cur]
+        # ---- last-touch attribution (kept prefix) -------------------------
+        last2 = np.full((n_dtn, M), -1, np.int64)
+        # forward scatter, last-wins: each (DTN, cell)'s last toucher
+        last2[d_inc, cell] = inc
+        duniq: dict[int, tuple] = {}
+        for d in active:
+            row = last2[d]
+            uc = (row >= 0).nonzero()[0]  # ascending touched cells
+            if len(uc):
+                duniq[d] = (uc, first2[d, uc], row[uc])
         # ---- peer resolution for the block's insert cells -----------------
         n_ins = len(ins_idx)
         acc2 = None
@@ -1618,6 +1679,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             la3 = la[o3]; sr3 = src_rec[o3]
             brk = np.empty(len(uc3), bool)
             brk[0] = True
+            r_grp = None
             if log:
                 brk[1:] = ((la3[1:] != la3[:-1]) | (ph3[1:] != ph3[:-1])
                            | (uc3[1:] != uc3[:-1] + 1))
@@ -1631,19 +1693,33 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                 # FIFOs make every later eviction scan cheaper.
                 ob3 = obj_a[i + la3]
                 brk[1:] = (uc3[1:] != uc3[:-1] + 1) | (ob3[1:] != ob3[:-1])
+                # group fusion: consecutive records of one object with
+                # strictly ascending (gap-allowed) key runs share ONE rid
+                # and ONE FIFO record — ascending disjoint runs under a
+                # single rid consume front-to-back exactly like adjacent
+                # split records, and the gaps' keys belong to other rids
+                # (evictions filter by rid ownership).  A group boundary is
+                # a subset condition of a record boundary, so ``r_grp`` is
+                # piecewise-constant over the ``gs`` records.
+                grp_brk = np.empty(len(uc3), bool)
+                grp_brk[0] = True
+                grp_brk[1:] = ((uc3[1:] <= uc3[:-1]) | (ob3[1:] != ob3[:-1]))
             gs = brk.nonzero()[0]
             ge = np.append(gs[1:], len(uc3)) - 1
+            if not log:
+                r_grp = np.cumsum(grp_brk[gs]) - 1
             if flat:
                 if z_parts is None:
                     e_ = np.empty(0, np.int64)
                     z_parts = (e_, e_, e_, e_, e_)
                 st.commit_block_arrays(*z_parts, obj_a[i + la3[gs]],
-                                       C[uc3[gs]], C[uc3[ge] + 1], sr3[gs])
+                                       C[uc3[gs]], C[uc3[ge] + 1], sr3[gs],
+                                       r_grp)
             else:
                 rec_recs = list(zip(
                     obj_a[i + la3[gs]].tolist(), C[uc3[gs]].tolist(),
                     C[uc3[ge] + 1].tolist(), sr3[gs].tolist()))
-                st.commit_block(size_recs, rec_recs)
+                st.commit_block(size_recs, rec_recs, r_grp)
         i = j
         if was_trunc:
             # the blocker request is served scalarly right away (exact for
@@ -1651,7 +1727,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             if i < n:
                 serve_scalar(i)
                 i += 1
-            degen += 1 if b_trunc < 8 else 0
+            degen += 1 if b_cur < 8 else 0
             blk = max(256, blk >> 1)
         else:
             degen = 0
@@ -1990,7 +2066,7 @@ class IntervalVDCSimulator(VectorVDCSimulator):
                 nh_l, acc_l, pdt_l, still_l, _ = _fused_block_replay(
                     states, self.bw, cfg.enable_peer_cache, False,
                     pos0 + live, dtn_arr[live], arr.obj[live], lo_a,
-                    lo_a + k_eff[live], per_chunk[live])
+                    lo_a + k_eff[live], per_chunk[live], ctr=self._ctr)
                 nh_full[live] = nh_l
                 o_peer[live] = acc_l * per_chunk[live]
                 o_pt[live] = pdt_l
@@ -2056,6 +2132,9 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             cache_stats=stats,
             stream_pushes=0,
             aggregate=agg,
+            evict_plan_calls=self._ctr["plan"],
+            block_truncations=self._ctr["trunc"],
+            degenerate_serves=self._ctr["degen"],
         )
 
     # -- global fused block replay (coarse-regime default) -------------------
@@ -2076,7 +2155,7 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         nh_l, acc_l, pdt_l, still_l, peer_ranges = _fused_block_replay(
             states, self.bw, cfg.enable_peer_cache, False,
             live, P["dtn"][live], P["obj"][live], lo_a,
-            lo_a + P["k_eff"][live], P["pc"][live])
+            lo_a + P["k_eff"][live], P["pc"][live], ctr=self._ctr)
         per_chunk = P["pc"]
         nh_full = np.zeros(n_req, np.int64)
         nh_full[live] = nh_l
@@ -2292,6 +2371,9 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             prefetch_used_chunks=0,
             cache_stats=out["stats"],
             stream_pushes=0,
+            evict_plan_calls=self._ctr["plan"],
+            block_truncations=self._ctr["trunc"],
+            degenerate_serves=self._ctr["degen"],
         )
 
 

@@ -82,7 +82,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.cache import CacheStats
+from repro.core.cache import CacheStats, EvictPlan
 
 _I64 = np.int64
 _EMPTY = np.empty(0, _I64)
@@ -216,6 +216,10 @@ class FlatIntervalState:
         # rid -> live chunk count (grown with _next_rid)
         self._live = np.zeros(64, _I64)
         self._next_rid = 1
+        # speculative eviction plan (cache.EvictPlan); _fgen guards its
+        # stored FIFO positions against queue compaction
+        self._plan: "EvictPlan | None" = None
+        self._fgen = 0
         self.obj_hi: dict[int, int] = {}
         # counters (CacheStats-compatible)
         self.hits = 0
@@ -330,6 +334,7 @@ class FlatIntervalState:
             setattr(self, name, na)
         self._fh = 0
         self._ft = m
+        self._fgen += 1                  # stored FIFO positions renumbered
 
     def _fifo_push(self, rid: int, lo: int, hi: int, src: int) -> None:
         if self._ft == len(self._fr):
@@ -640,8 +645,9 @@ class FlatIntervalState:
             self._rs, self._re, self._rr = rs, re_, rr
             self._rn = n
             self._rdead = 0            # rebuilds drop all tombstones
-        # rids are fresh and unique, so assignment stands in for add.at
-        self._live[rids] = runs_e - runs_s
+        # rids are fresh (so their counts start at 0), but grouped commits
+        # repeat a rid across runs — accumulate, don't assign
+        np.add.at(self._live, rids, runs_e - runs_s)
 
     def _valid_segs(self, rid: int, obj: int, lo: int,
                     hi: int) -> list[tuple[int, int]]:
@@ -685,11 +691,18 @@ class FlatIntervalState:
         or two), then the batched array scan takes over.  Both consume the
         same LRU prefix, so mixing them is exact."""
         if self._log:
+            self._plan = None          # per-record pops bypass the plan
             self._evict_logged(size, t_now)
             return
         cap = self.capacity
         if self.used + size <= cap:
             return
+        p = self._plan
+        if p is not None:
+            if p.fgen == self._fgen:
+                self._evict_via_plan(p, size)
+                return
+            self._plan = None          # FIFO compacted: positions stale
         live = self._live
         fr = self._fr
         flo = self._flo
@@ -870,6 +883,170 @@ class FlatIntervalState:
         order = sub_s.argsort()
         self._z_subtract(sub_s[order], sub_e[order])
 
+    # -- speculative eviction planning (cache.EvictPlan) ---------------------
+
+    def _plan_seg_bytes(self, obj: int, s: int, stop: int) -> int:
+        """Bytes of the present run ``[s, stop)`` (``obj`` unused — the
+        global size map prices any run)."""
+        return self._bytes_below1(stop) - self._bytes_below1(s)
+
+    def get_evict_plan(self, max_need: int) -> "EvictPlan":
+        """The state's speculative eviction plan, guaranteed to cover
+        ``>= max_need`` bytes or be exhausted.  A cached plan short of the
+        bar is *extended* from its scan frontier when the FIFO generation
+        still matches (the common case: block truncations re-query with
+        shrinking needs, evictions consume the planned prefix in order);
+        a compaction-stale plan is rebuilt from the queue head."""
+        p = self._plan
+        if p is not None:
+            if p.total >= max_need:
+                return p
+            if p.fgen == self._fgen:
+                if p.pos >= self._ft:
+                    return p           # exhausted: covers every byte
+                self._plan_extend(p, max_need)
+                return p
+        p = EvictPlan(self)
+        p.pos = self._fh
+        p.fgen = self._fgen
+        self._plan = p
+        self._plan_extend(p, max_need)
+        return p
+
+    def _plan_extend(self, p: "EvictPlan", max_need: int) -> None:
+        """Scan the FIFO from the plan's frontier, appending victim runs
+        until planned bytes reach ~2x ``max_need`` or the queue ends.
+        Pure (no ``_fh`` advance — stale records are skipped, not
+        dropped); mirrors ``_evict_batched``'s gather exactly."""
+        t = self._ft
+        target = 2 * max_need
+        pos = p.pos
+        vs_parts: list[np.ndarray] = []
+        ve_parts: list[np.ndarray] = []
+        by_parts: list[np.ndarray] = []
+        rec_parts: list[np.ndarray] = []
+        got = 0
+        K = 32
+        while pos < t and p.total + got < target:
+            q = min(t, pos + K)
+            K = min(1024, K * 2)
+            alive = self._live[self._fr[pos:q]] > 0
+            rpos = alive.nonzero()[0] + pos
+            pos = q
+            if not len(rpos):
+                continue
+            rec_of, seg, s, e = self._gather_segs(
+                self._flo[rpos], self._fhi[rpos], self._fr[rpos])
+            if not len(seg):
+                continue
+            by = self._bytes_below(e) - self._bytes_below(s)
+            vs_parts.append(s)
+            ve_parts.append(e)
+            by_parts.append(by)
+            rec_parts.append(rpos[rec_of])
+            got += int(by.sum())
+        p.pos = pos
+        p.exhausted = pos >= t
+        if vs_parts:
+            p.vs = np.concatenate([p.vs] + vs_parts)
+            p.ve = np.concatenate([p.ve] + ve_parts)
+            p.segb = np.concatenate([p.segb] + by_parts)
+            p.vrec = np.concatenate([p.vrec] + rec_parts)
+            p.cumb = p.segb.cumsum()
+            p.total += got
+            p._index()
+
+    def _evict_via_plan(self, p: "EvictPlan", size: int) -> None:
+        """Consume the planned victim prefix to fit ``used + size`` —
+        state mutations identical to :meth:`_evict_batched` (same cutoff
+        search, same per-size-run ceil arithmetic on the cut run), but fed
+        from the plan instead of a fresh FIFO scan.  Exact because the
+        plan's runs are, under the validity guards, precisely what that
+        scan would find, and the leftover plan suffix equals the next
+        scan's result (consumption advances ``_fh``/``_flo`` in step)."""
+        need = self.used + size - self.capacity
+        if p.total < need:
+            if p.pos < self._ft:
+                self._plan_extend(p, need)
+            if p.total < need and p.pos >= self._ft:
+                # planning every freeable byte still falls short — the
+                # reference's evict-from-empty popleft
+                raise IndexError("pop from an empty deque")
+        cumb = p.cumb
+        cut = int(cumb.searchsorted(need, side="left"))
+        base = int(cumb[cut - 1]) if cut > 0 else 0
+        s_c = int(p.vs[cut])
+        e_c = int(p.ve[cut])
+        # cut run: the reference's per-size-run ceil arithmetic
+        rem = need - base
+        ze = self._ze
+        zv = self._zv
+        zi = int(ze[:self._zn].searchsorted(s_c, side="right"))
+        stop = s_c
+        part_bytes = 0
+        while stop < e_c and rem > 0:
+            z = int(zv[zi])
+            pe = int(ze[zi])
+            if pe > e_c:
+                pe = e_c
+            take = min(pe - stop, -(-rem // z))
+            part_bytes += take * z
+            rem -= take * z
+            stop += take
+            if stop == pe:
+                zi += 1
+        vs_f = p.vs[:cut]
+        ve_f = p.ve[:cut]
+        n_full = int((ve_f - vs_f).sum())
+        n_part = stop - s_c
+        self.used -= base + part_bytes
+        self.n_live -= n_full + n_part
+        self.evictions += n_full + n_part
+        rn = self._rn
+        re_live = self._re[:rn]
+        if cut:
+            # recover the recency-run index of each victim run: runs are
+            # consumed front-to-back, so a live run starts exactly at the
+            # victim start and is the first entry ending past it
+            # (end-sortedness; same lookup as _evict_range)
+            Fseg = re_live.searchsorted(vs_f, side="right")
+            np.add.at(self._live, self._rr[Fseg], -(ve_f - vs_f))
+            self._rs[Fseg] = self._re[Fseg]    # tombstone in place
+            self._rdead += cut
+        seg_c = int(re_live.searchsorted(s_c, side="right"))
+        self._live[self._rr[seg_c]] -= n_part
+        self._rs[seg_c] = stop
+        if stop == e_c:
+            self._rdead += 1
+        # the cut record keeps the queue head with its remainder
+        rec_c = int(p.vrec[cut])
+        self._fh = rec_c
+        self._flo[rec_c] = stop
+        sub_s = np.append(vs_f, s_c)
+        sub_e = np.append(ve_f, stop)
+        order = sub_s.argsort()
+        self._z_subtract(sub_s[order], sub_e[order])
+        # advance the plan past the consumed prefix (ks/ke stay stale —
+        # consumed runs can only cause a spurious, safe invalidation)
+        if stop < e_c:
+            vs2 = p.vs[cut:].copy()
+            vs2[0] = stop
+            sb2 = p.segb[cut:].copy()
+            sb2[0] -= part_bytes
+            p.vs = vs2
+            p.ve = p.ve[cut:]
+            p.vrec = p.vrec[cut:]
+            p.segb = sb2
+        else:
+            p.vs = p.vs[cut + 1:]
+            p.ve = p.ve[cut + 1:]
+            p.vrec = p.vrec[cut + 1:]
+            p.segb = p.segb[cut + 1:]
+        p.cumb = p.segb.cumsum()
+        p.total -= base + part_bytes
+        if self._rdead > 64 and self._rdead * 2 > self._rn:
+            self._r_compact()
+
     def _evict_logged(self, size: int, t_now: int) -> None:
         """Log-mode eviction: the list version's per-record loop (phase B
         of the sharded driver needs per-call ``evict_log``/``split_log``
@@ -958,126 +1135,52 @@ class FlatIntervalState:
         before the first victim chunk inside a *blocked* run, clamped at
         ``max_need`` (see the contract note at the call site in
         ``engine._fused_block_replay``).  Pure; accepts lists or arrays
-        for the blocked runs."""
+        for the blocked runs.  Answered from the state's speculative
+        :class:`~repro.core.cache.EvictPlan`, which persists across block
+        truncations, later blocks, and the evictions that consume it."""
         max_need = int(max_need)
         if max_need <= 0:
             return 0
-        bs = blocked_starts if isinstance(blocked_starts, np.ndarray) \
-            else np.asarray(blocked_starts, _I64)
-        be = blocked_ends if isinstance(blocked_ends, np.ndarray) \
-            else np.asarray(blocked_ends, _I64)
-        nb = len(bs)
-        freed = 0
-        live = self._live
-        fr = self._fr
-        t = self._ft
-        p = self._fh
-        # scalar prefix: under eviction pressure the scan usually
-        # terminates within a record or two (blocked run hit, or the
-        # shortfall covered) — walk those with plain ints before paying
-        # for the batched machinery
-        budget = 8
-        while budget > 0:
-            budget -= 1
-            while p < t and live[fr[p]] <= 0:
-                p += 1
-            if p >= t:
-                return min(freed, max_need)
-            rid = int(fr[p])
-            lo = int(self._flo[p])
-            hi = int(self._fhi[p])
-            rn = self._rn
-            rs = self._rs
-            re_ = self._re
-            rr = self._rr
-            i0 = int(re_[:rn].searchsorted(lo, side="right"))
-            j0 = int(rs[:rn].searchsorted(hi, side="left"))
-            if j0 - i0 > 24:
-                break                      # fragmented: batched scan wins
-            for k in range(i0, j0):
-                if rr[k] != rid:
-                    continue
-                s = int(rs[k])
-                e = int(re_[k])
-                if e <= s:
-                    continue
-                if s < lo:
-                    s = lo
-                if e > hi:
-                    e = hi
-                stop = e
-                if nb:
-                    bi = int(bs.searchsorted(s, side="right")) - 1
-                    if bi >= 0 and be[bi] > s:
-                        # next victim chunk sits in a blocked run: stop
-                        # before accumulating anything from it
-                        return freed
-                    if bi + 1 < nb:
-                        nxt = int(bs[bi + 1])
-                        if nxt < stop:
-                            stop = nxt
-                freed += self._bytes_below1(stop) - self._bytes_below1(s)
-                if freed >= max_need:
-                    return max_need
-                if stop < e:
-                    return freed           # next chunk is blocked
-            p += 1
-        K = 64
-        while p < t:
-            q = min(t, p + K)
-            K = min(2048, K * 2)
-            alive = self._live[self._fr[p:q]] > 0
-            rpos = alive.nonzero()[0] + p
-            p = q
-            if not len(rpos):
-                continue
-            rec_of, seg, s, e = self._gather_segs(
-                self._flo[rpos], self._fhi[rpos], self._fr[rpos])
-            if not len(seg):
-                continue
-            if nb:
-                bi = bs.searchsorted(s, side="right") - 1
-                blocked0 = (bi >= 0) & (be[np.maximum(bi, 0)] > s)
-                nxt = np.minimum(bi + 1, nb - 1)
-                cand = np.where(bi + 1 < nb, bs[nxt],
-                                np.iinfo(_I64).max)
-                stop = np.minimum(e, cand)
-            else:
-                blocked0 = np.zeros(len(s), bool)
-                stop = e
-            add = self._bytes_below(stop) - self._bytes_below(s)
-            cumb = freed + add.cumsum()
-            blk_i = blocked0.nonzero()[0]
-            t_a = int(blk_i[0]) if len(blk_i) else len(s)
-            done_i = ((cumb >= max_need) | (stop < e)).nonzero()[0]
-            t_b = int(done_i[0]) if len(done_i) else len(s)
-            if min(t_a, t_b) < len(s):
-                if t_a <= t_b:
-                    # next victim chunk sits in a blocked run: stop before
-                    # accumulating anything from that run
-                    return int(cumb[t_a - 1]) if t_a > 0 else freed
-                return min(int(cumb[t_b]), max_need)
-            freed = int(cumb[-1])
-        return min(freed, max_need)
+        return self.get_evict_plan(max_need).clean_before(
+            max_need, blocked_starts, blocked_ends)
 
-    def commit_block(self, size_recs: list, recency_recs: list) -> None:
+    def commit_block(self, size_recs: list, recency_recs: list,
+                     r_grp: "list | None" = None) -> None:
         """Bulk-commit one fused replay block (list-of-tuples API parity
         with the list version; see :meth:`commit_block_arrays`)."""
         za = np.asarray(size_recs, _I64).reshape(-1, 5)
         ra = np.asarray(recency_recs, _I64).reshape(-1, 4)
         self.commit_block_arrays(za[:, 0], za[:, 1], za[:, 2], za[:, 3],
                                  za[:, 4], ra[:, 0], ra[:, 1], ra[:, 2],
-                                 ra[:, 3])
+                                 ra[:, 3],
+                                 None if r_grp is None
+                                 else np.asarray(r_grp, _I64))
 
     def commit_block_arrays(self, z_obj, z_lo, z_hi, z_src, z_sz,
-                            r_obj, r_lo, r_hi, r_src) -> None:
+                            r_obj, r_lo, r_hi, r_src,
+                            r_grp: "np.ndarray | None" = None) -> None:
         """Bulk-commit one fused replay block from the column arrays the
         engine already computed (same record semantics as the list
         version's ``commit_block``: size records carry presence/byte
         bookkeeping in trace order, recency records append FIFO records in
-        final-stamp order).  Each map is merged in one batched rebuild."""
+        final-stamp order).  Each map is merged in one batched rebuild.
+
+        ``r_grp`` (non-log mode): contiguous non-decreasing group ids
+        parallel to the recency columns — one group's records (same
+        DTN-object group, consecutive final stamps, ascending disjoint key
+        runs) are fused under ONE rid and ONE FIFO record spanning
+        first-lo..last-hi; see the exactness argument on the list
+        version's ``commit_block``."""
         log = self._log
         kz = len(z_lo)
+        p = self._plan
+        if p is not None and len(r_lo) and len(p.ks):
+            # a recency record re-stamping a planned victim invalidates
+            # the plan (size records insert absent keys — never victims)
+            ii = p.ks.searchsorted(r_hi, side="left")
+            if bool(((ii > 0) & (p.ke[np.maximum(ii - 1, 0)]
+                                 > r_lo)).any()):
+                self._plan = None
         if kz:
             nm = z_hi - z_lo
             tot_chunks = int(nm.sum())
@@ -1114,33 +1217,73 @@ class FlatIntervalState:
         kr = len(r_lo)
         if kr:
             rr_ = self._req_records
+            if r_grp is not None:
+                gh_mask = np.empty(kr, bool)
+                gh_mask[0] = True
+                gh_mask[1:] = r_grp[1:] != r_grp[:-1]
+                gh = gh_mask.nonzero()[0]          # group head run indices
+                gt = np.append(gh[1:], kr) - 1     # group tail run indices
+                G = len(gh)
             if kr <= 8:
                 # small commit: push + splice one record at a time (splices
                 # set live counts immediately, so no bulk reserve is needed)
-                self._fifo_reserve(kr)
-                for o, a, b, s_ in zip(r_obj.tolist(), r_lo.tolist(),
-                                       r_hi.tolist(), r_src.tolist()):
+                if r_grp is None:
+                    self._fifo_reserve(kr)
+                    for o, a, b, s_ in zip(r_obj.tolist(), r_lo.tolist(),
+                                           r_hi.tolist(), r_src.tolist()):
+                        rid = self._new_rid()
+                        self._fifo_push(rid, a, b, s_)
+                        if log and s_ >= 0:
+                            rr_.setdefault(s_, []).append((rid, o, a, b))
+                        self._splice(False, a, b, (a,), (b,), (rid,))
+                    return
+                self._fifo_reserve(G)
+                lo_l = r_lo.tolist()
+                hi_l = r_hi.tolist()
+                src_l = r_src.tolist()
+                for x in range(G):
+                    h = int(gh[x])
+                    t_ = int(gt[x])
                     rid = self._new_rid()
-                    self._fifo_push(rid, a, b, s_)
-                    if log and s_ >= 0:
-                        rr_.setdefault(s_, []).append((rid, o, a, b))
-                    self._splice(False, a, b, (a,), (b,), (rid,))
+                    src_g = src_l[h] if h == t_ else -1
+                    self._fifo_push(rid, lo_l[h], hi_l[t_], src_g)
+                    if log and src_g >= 0:
+                        rr_.setdefault(src_g, []).append(
+                            (rid, int(r_obj[h]), lo_l[h], hi_l[h]))
+                    for y in range(h, t_ + 1):
+                        self._splice(False, lo_l[y], hi_l[y],
+                                     (lo_l[y],), (hi_l[y],), (rid,))
                 return
-            rid0 = self._next_rid
-            self._next_rid = rid0 + kr
-            self._live_reserve(self._next_rid)
-            rids = np.arange(rid0, rid0 + kr, dtype=_I64)
-            self._fifo_reserve(kr)
+            if r_grp is None:
+                rid0 = self._next_rid
+                self._next_rid = rid0 + kr
+                self._live_reserve(self._next_rid)
+                rids_rec = np.arange(rid0, rid0 + kr, dtype=_I64)
+                rids_run = rids_rec
+                f_lo, f_hi, f_src = r_lo, r_hi, r_src
+                f_obj = r_obj
+                G = kr
+            else:
+                rid0 = self._next_rid
+                self._next_rid = rid0 + G
+                self._live_reserve(self._next_rid)
+                rids_rec = np.arange(rid0, rid0 + G, dtype=_I64)
+                rids_run = rid0 + (np.cumsum(gh_mask) - 1)
+                f_lo = r_lo[gh]
+                f_hi = r_hi[gt]
+                f_src = np.where(gh == gt, r_src[gh], -1)
+                f_obj = r_obj[gh]
+            self._fifo_reserve(G)
             t = self._ft
-            self._fr[t:t + kr] = rids
-            self._flo[t:t + kr] = r_lo
-            self._fhi[t:t + kr] = r_hi
-            self._fsrc[t:t + kr] = r_src
-            self._ft = t + kr
+            self._fr[t:t + G] = rids_rec
+            self._flo[t:t + G] = f_lo
+            self._fhi[t:t + G] = f_hi
+            self._fsrc[t:t + G] = f_src
+            self._ft = t + G
             if log:
-                for rid, o, a, b, s_ in zip(rids.tolist(), r_obj.tolist(),
-                                            r_lo.tolist(), r_hi.tolist(),
-                                            r_src.tolist()):
+                for rid, o, a, b, s_ in zip(rids_rec.tolist(),
+                                            f_obj.tolist(), f_lo.tolist(),
+                                            f_hi.tolist(), f_src.tolist()):
                     if s_ >= 0:
                         rr_.setdefault(s_, []).append((rid, o, a, b))
             rl = np.asarray(r_lo, _I64)
@@ -1149,8 +1292,8 @@ class FlatIntervalState:
                 o3 = rl.argsort(kind="stable")
                 rl = rl[o3]
                 rh = rh[o3]
-                rids = rids[o3]
-            self._r_replace(rl, rh, rids)
+                rids_run = rids_run[o3]
+            self._r_replace(rl, rh, rids_run)
 
     # -- serving -------------------------------------------------------------
 
@@ -1161,6 +1304,11 @@ class FlatIntervalState:
         ascending order, one coalesced record per maximal present run)."""
         if hi <= lo:
             return 0, ()
+        p = self._plan
+        if p is not None and hi > p.kmin and lo < p.kmax:
+            i_ = int(p.ks.searchsorted(hi, side="left"))
+            if i_ > 0 and int(p.ke[i_ - 1]) > lo:
+                self._plan = None  # touch may re-stamp a planned victim
         rn = self._rn
         rs = self._rs
         re_ = self._re

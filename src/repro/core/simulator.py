@@ -244,6 +244,12 @@ class SimResult:
     # Streaming replay: per-request outcomes are not retained; their totals
     # live here and the derived metrics below fall back to them.
     aggregate: "OutcomeAggregate | None" = None
+    # Eviction-path telemetry (block-replay engines; 0 for the reference):
+    # speculative eviction-plan calls, blocks truncated at eviction
+    # pressure, and requests served through the scalar fallback.
+    evict_plan_calls: int = 0
+    block_truncations: int = 0
+    degenerate_serves: int = 0
 
     def outcome_totals(self) -> OutcomeAggregate:
         """Outcome column totals, independent of how the trace was replayed

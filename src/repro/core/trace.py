@@ -390,7 +390,18 @@ class RequestList(list):
 
     def __getitem__(self, i):
         out = super().__getitem__(i)
-        return RequestList(out) if isinstance(i, slice) else out
+        if not isinstance(i, slice):
+            return out
+        out = RequestList(out)
+        cached = self._arrays
+        if cached is not None and i.step in (None, 1):
+            # contiguous slice of a memoized trace: the transpose slices
+            # column-wise for free instead of being recomputed downstream
+            start, stop, _ = i.indices(len(self))
+            out._arrays = RequestArrays(
+                *(getattr(cached, f.name)[start:stop]
+                  for f in dataclasses.fields(RequestArrays)))
+        return out
 
 
 def _invalidating(name):

@@ -207,6 +207,30 @@ def test_fuzz_engines_agree_deep(strategy):
     _sweep(strategy, DEEP_EXAMPLES)
 
 
+THRASH_EXAMPLES = 10
+
+
+@pytest.mark.parametrize("strategy", ("cache_only", "md1", "hpm"))
+def test_fuzz_thrash_regime(strategy):
+    """Eviction-thrash sweep: the cache is pinned to a few requests' worth
+    of bytes so nearly every fused block runs the speculative eviction
+    planner's full lifecycle — plan, truncate, incremental re-plan,
+    invalidate-on-commit — and the vector engine's batched plan consume.
+    LRU is pinned so the cache_only leg sweeps all interval routes."""
+    for i in range(THRASH_EXAMPLES):
+        rng = random.Random((FUZZ_SEED, "thrash", strategy, i).__repr__())
+        grid, trace, cfg_kw = gen_scenario(rng)
+        cfg_kw["cache_policy"] = "lru"
+        cfg_kw["cache_bytes"] = rng.choice([128 << 10, 256 << 10, _U])
+        window = rng.choice((1, 3, 7, 17))
+        try:
+            check_strategy(strategy, grid, trace, cfg_kw, window=window)
+        except AssertionError as e:
+            raise AssertionError(
+                f"thrash scenario {i} (seed base {FUZZ_SEED}) of strategy "
+                f"{strategy}: {e}") from e
+
+
 # ---------------------------------------------------------------------------
 # hypothesis-driven adaptive profile (CI fuzz job)
 # ---------------------------------------------------------------------------

@@ -386,3 +386,108 @@ def test_flat_matches_list_randomized(seed, log):
             b.check_invariants()
             assert _state_digest(a) == _state_digest(b)
     assert _state_digest(a) == _state_digest(b)
+
+
+@pytest.mark.parametrize("cls", _STATES)
+@pytest.mark.parametrize("log", [True, False])
+def test_plan_invalidated_by_mid_block_commit(cls, log):
+    """A commit whose recency record lands inside a speculative plan's
+    victim set must drop the cached plan: the re-stamped run is now MRU,
+    so consuming the stale plan would evict the wrong victims.  Proven by
+    transparency — the planned state must stay digest-identical to a twin
+    that never planned (planning is a pure, cached scan)."""
+    planned = cls(100, log_events=log)
+    twin = cls(100, log_events=log)
+    for st in (planned, twin):
+        st.serve(0, 0, 0, 30, 1)          # record A — the oldest victim
+        st.serve(1, 0, 100, 130, 1)       # record B
+        st.serve(2, 0, 200, 230, 1)       # record C; used = 90 of 100
+    clean = planned.plan_evict_clean(40, [], [])
+    assert clean == 40 and planned._plan is not None
+    # mid-block commit: insert D (fits the remaining room) and re-stamp
+    # [5, 25) — strictly inside planned victim A — to recency t=3
+    recs_z = [(0, 300, 310, 3, 1)]
+    recs_r = [(0, 5, 25, 3), (0, 300, 310, 3)]
+    for st in (planned, twin):
+        st.commit_block(recs_z, recs_r)
+    assert planned._plan is None          # the guard must have fired
+    # eviction pressure: 40 inserted bytes evict the A remnants (10) and
+    # B (30) in true LRU order; a stale plan would have taken all of A
+    for st in (planned, twin):
+        st.serve(4, 0, 400, 440, 1)
+    assert planned.coverage_runs(0, 0, 30) == [(5, 25)]
+    assert _state_digest(planned) == _state_digest(twin)
+    planned.check_invariants()
+    twin.check_invariants()
+
+
+@pytest.mark.parametrize("cls", _STATES)
+@pytest.mark.parametrize("log", [True, False])
+@pytest.mark.parametrize("seed", range(4))
+def test_plan_is_semantically_inert_randomized(cls, log, seed):
+    """Seeded transparency fuzz: interleave speculative plans (on one state
+    only) with serves, lookups and fused commits whose recency records may
+    land on present runs — including planned victims.  The planning state
+    must remain digest-identical to a plan-free twin at every checkpoint,
+    whatever mix of plan reuse, extension and invalidation occurs."""
+    span = 1 << 20
+    rng = random.Random((20260808, "plan-inert", seed, log,
+                         cls.__name__).__repr__())
+    cap = rng.choice([150, 600])
+    planned = cls(cap, log_events=log)
+    twin = cls(cap, log_events=log)
+    sizes: dict = {}
+    for step in range(120):
+        op = rng.random()
+        obj = rng.randrange(3)
+        size = sizes.setdefault(obj, rng.choice([1, 2, 5]))
+        lo = obj * span + rng.randrange(250)
+        hi = lo + rng.randrange(1, 40)
+        if op < 0.45:
+            assert planned.serve(step, obj, lo, hi, size) == \
+                twin.serve(step, obj, lo, hi, size)
+        elif op < 0.65:
+            # speculative plan on one state only (pure scan, cached)
+            bl = sorted(rng.sample(range(obj * span, obj * span + 300), 2))
+            planned.plan_evict_clean(rng.randrange(1, cap), [bl[0]],
+                                     [bl[1]])
+        elif op < 0.85:
+            # fused commit: disjoint absent runs + one recency record over
+            # a random present run (the mid-plan re-stamp the guard is for)
+            held = set(k for s, e in planned.intervals()
+                       for k in range(s, e))
+            recs_z, recs_r = [], []
+            pos = obj * span + rng.randrange(300)
+            for _ in range(rng.randrange(1, 3)):
+                w = rng.randrange(1, 15)
+                run = sorted(k for k in range(pos, pos + w)
+                             if k not in held)
+                pos += w + rng.randrange(0, 8)
+                i = 0
+                while i < len(run):
+                    j = i
+                    while j + 1 < len(run) and run[j + 1] == run[j] + 1:
+                        j += 1
+                    recs_z.append((obj, run[i], run[j] + 1, step, size))
+                    recs_r.append((obj, run[i], run[j] + 1, step))
+                    held.update(range(run[i], run[j] + 1))
+                    i = j + 1
+            iv = planned.intervals()
+            if iv and rng.random() < 0.7:
+                s, e = iv[rng.randrange(len(iv))]
+                s2 = rng.randrange(s, e)
+                e2 = rng.randrange(s2 + 1, e + 1)
+                recs_r.append((s2 // span, s2, e2, step))
+            tot = sum((e0 - s0) * sz for _, s0, e0, _, sz in recs_z)
+            if recs_r and planned.used + tot <= cap:
+                planned.commit_block(recs_z, recs_r)
+                twin.commit_block(recs_z, recs_r)
+        else:
+            ra = planned.lookup_touch(obj, lo, hi, size)
+            rb = twin.lookup_touch(obj, lo, hi, size)
+            assert ra[0] == rb[0] and list(ra[1]) == list(rb[1])
+        if step % 11 == 0:
+            planned.check_invariants()
+            twin.check_invariants()
+            assert _state_digest(planned) == _state_digest(twin)
+    assert _state_digest(planned) == _state_digest(twin)

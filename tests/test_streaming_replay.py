@@ -116,7 +116,14 @@ def test_streaming_equals_materialized(trace, strategy, engine, splits):
     {"interval_flat_state": True},
     {"interval_flat_state": False},
     {"chunk_seconds": 60.0},        # fine chunking: the sweep regime
-], ids=["shards2", "flat_on", "flat_off", "sweep"])
+    # eviction-pressure legs: a cache far below the working set keeps the
+    # fused path planning/truncating across window boundaries, so the
+    # speculative eviction plan's reuse-and-invalidate lifecycle is pinned
+    # under the streaming==materialized contract for both state layouts
+    {"cache_bytes": 1 << 22},
+    {"cache_bytes": 1 << 22, "interval_flat_state": False},
+], ids=["shards2", "flat_on", "flat_off", "sweep", "thrash_flat",
+        "thrash_list"])
 def test_streaming_interval_knobs(cfg_kw, splits):
     trace, strategy = "ooi", "cache_only"
     mat = _mat_run(trace, splits, strategy, "interval", **cfg_kw)
