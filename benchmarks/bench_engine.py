@@ -192,7 +192,9 @@ def run_scenario(trace: str, strategy: str, chunk_seconds: float,
             counters[engine] = _counters(res)
             evict_ctr[engine] = dict(plan=res.evict_plan_calls,
                                      trunc=res.block_truncations,
-                                     degen=res.degenerate_serves)
+                                     degen=res.degenerate_serves,
+                                     phases=res.block_phases,
+                                     invict=res.inblock_victims)
     if window:
         # windowed rows additionally audit against a materialized run (the
         # streaming==materialized contract, tests/test_streaming_replay.py)

@@ -509,7 +509,8 @@ class IntLRUState(IntCacheState):
         ends = np.concatenate(end_parts)
         return vk, cum, ends
 
-    def plan_evictions_spec(self, need: int, blocked_mask: "np.ndarray"
+    def plan_evictions_spec(self, need: int, blocked_mask: "np.ndarray",
+                            thresh: int | None = None
                             ) -> tuple["np.ndarray", "np.ndarray", "np.ndarray"]:
         """:meth:`plan_evictions` through a reusable speculative plan.
 
@@ -522,6 +523,11 @@ class IntLRUState(IntCacheState):
         exactly a fresh :meth:`plan_evictions` scan: plan victims are kept
         only while present with unchanged stamps, which is precisely the
         FIFO records a fresh scan would accept over the scanned prefix.
+
+        With ``thresh``, ``blocked_mask`` is instead an int64 last-occurrence
+        array and a key is blocked iff ``blocked_mask[key] >= thresh`` —
+        the engine's per-block monotone position index, which avoids a
+        per-boundary O(suffix) mark/unmark sweep over the key space.
         """
         p = self._plan
         if p is None or p.fgen != self._fgen:
@@ -540,7 +546,8 @@ class IntLRUState(IntCacheState):
             nvk = len(p.vk)
             stop = nvk
             if nvk:
-                amb = blocked_mask[p.vk]
+                amb = (blocked_mask[p.vk] if thresh is None
+                       else blocked_mask[p.vk] >= thresh)
                 if amb.any():
                     stop = int(np.argmax(amb))
             cum = p.vsz[:stop].cumsum()

@@ -264,7 +264,12 @@ def select_peer_sources_ranges(bw_col: np.ndarray, holders: np.ndarray
     from each cache's block-start presence snapshot (``coverage_arrays``;
     on :class:`repro.core.interval_store.FlatIntervalState` these are live
     zero-copy views of the size-map columns) plus in-block first-toucher
-    attribution.  The caller must already have cleared the origin row and
+    attribution.  Under phased block replay the block-start snapshot doubles
+    as every phase's phase-start snapshot: mid-block evictions only consume
+    keys whose last in-block occurrence precedes the phase boundary (the
+    legal-victim invariant), so no key a later phase still serves can lose
+    its snapshot presence mid-block and the one resolution stays exact for
+    all phases.  The caller must already have cleared the origin row and
     each run's own-DTN entry.
 
     Returns ``(src, best_bw, accepted)`` under the reference's §IV-D rule:

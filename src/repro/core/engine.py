@@ -151,6 +151,7 @@ class VectorVDCSimulator:
         self._last_placement_ts = 0.0
         self._ulink = USER_LINK_GBPS * GBPS
         self._bw0 = [float(self.bw[0, d]) for d in range(self.n_dtn)]
+        self._bw0a = np.array(self._bw0)
         self._bw_l = self.bw.tolist()
         # chunk-address space (set up in run())
         self._off = 0
@@ -161,9 +162,14 @@ class VectorVDCSimulator:
         self._pref2d: np.ndarray | None = None
         self._pref_issued = 0
         self._pref_used = 0
-        # eviction-path telemetry (ISSUE 9): speculative plan calls, block
-        # truncations at eviction pressure, scalar fallback serves
-        self._ctr = {"plan": 0, "trunc": 0, "degen": 0}
+        # eviction-path telemetry (ISSUE 9/10): speculative plan calls,
+        # blocks ended early at eviction pressure, scalar fallback serves,
+        # committed mid-block phases, chunks evicted at mid-block boundaries
+        self._ctr = {"plan": 0, "trunc": 0, "degen": 0,
+                     "phases": 0, "invict": 0}
+        # phased block replay: block sizing survives streamed window edges
+        self._blk = 256
+        self._degen = 0
 
     def _origin_dur(self, nbytes: float, dtn: int) -> float:
         """Origin-link wire time, with the reference's zero-bandwidth
@@ -201,8 +207,12 @@ class VectorVDCSimulator:
             for d in range(1, self.n_dtn)
         }
         self._pref2d = np.zeros((self.n_dtn, n_keys), np.uint8)
-        # current block's key set, for eviction planning
-        self._blk_mark = np.zeros(n_keys, np.bool_)
+        # per-key last in-block occurrence as a global monotone position:
+        # one scatter per block; a key is still referenced at/after a phase
+        # boundary s0 iff _blk_last[key] >= gbase + s0 (entries from older
+        # blocks sit below gbase — no per-boundary sweep, no clearing)
+        self._blk_last = np.zeros(n_keys, np.int64)
+        self._blk_gpos = 1
         self._flat_dt = (np.int32 if self.n_dtn * n_keys < 2**31
                          else np.int64)
 
@@ -230,7 +240,8 @@ class VectorVDCSimulator:
         self._present2d = present_new
         self._present_flat = present_new.reshape(-1)
         self._pref2d = pref_new
-        self._blk_mark = np.zeros(n_keys_new, np.bool_)
+        self._blk_last = np.zeros(n_keys_new, np.int64)
+        self._blk_gpos = 1                  # remap happens between blocks
         self._flat_dt = (np.int32 if self.n_dtn * n_keys_new < 2**31
                          else np.int64)
         # per-request base keys shift too
@@ -279,6 +290,8 @@ class VectorVDCSimulator:
             evict_plan_calls=self._ctr["plan"],
             block_truncations=self._ctr["trunc"],
             degenerate_serves=self._ctr["degen"],
+            block_phases=self._ctr["phases"],
+            inblock_victims=self._ctr["invict"],
         )
 
     def _prep_window(self, arr, hint: tuple[int, int] | None = None,
@@ -417,6 +430,8 @@ class VectorVDCSimulator:
             evict_plan_calls=self._ctr["plan"],
             block_truncations=self._ctr["trunc"],
             degenerate_serves=self._ctr["degen"],
+            block_phases=self._ctr["phases"],
+            inblock_victims=self._ctr["invict"],
         )
 
     # -- static fast path (no dynamic events) --------------------------------
@@ -439,13 +454,17 @@ class VectorVDCSimulator:
         # misses *included*: in the static path every missed chunk is
         # inserted into the local DTN cache (peer or origin source), so a
         # chunk position is a true hit iff it hits the block-start snapshot
-        # OR the same (dtn, chunk) occurred earlier in the block.  Blocks are
-        # truncated so no cache can evict mid-block, keeping the snapshot
-        # monotone.  Only origin-queue submits replay scalarly (their state
-        # is sequential but tiny).
+        # OR the same (dtn, chunk) occurred earlier in the block.  Blocks
+        # under eviction pressure are replayed in PHASES: victims are
+        # evicted at phase boundaries, and planning at a boundary blocks
+        # every key referenced in the remaining suffix, so no still-queried
+        # chunk is ever evicted and the classification stays exact for the
+        # whole block.  Only origin-queue submits replay scalarly (their
+        # state is sequential but tiny).
         n_keys = self._n_keys
-        i, block = 0, 256
-        degenerate = 0
+        i = 0
+        block = self._blk
+        degenerate = self._degen
         while i < n_req:
             if degenerate >= 4:
                 # cache-thrash regime (working set >> capacity): block
@@ -494,182 +513,216 @@ class VectorVDCSimulator:
             dup[order_f[newrun]] = False
             true_hit = h0 | dup
             ins = ~true_hit
-            b = j
-            ev_plans: list[tuple] = []
-            blocked_keys = None
-            if ins.any():
-                # Evictions are allowed mid-block as long as no victim's key
-                # is referenced anywhere in the block (else hit/peer
-                # decisions would change): plan victims per cache against
-                # the block key set, truncating at the first insert that
-                # cannot be satisfied with unreferenced victims.
-                ins_pos = ins.nonzero()[0]
-                ins_d = dtns[ins_pos]
-                ins_bytes = pc_a[req_rep[ins_pos]]
-                blocked_keys = keys
-                self._blk_mark[blocked_keys] = True
+            # an insert larger than its cache is *skipped* by the
+            # reference, breaking the duplicate-hit invariant → blocker
+            b_big = j
+            ins_pos_all = ins.nonzero()[0]
+            if len(ins_pos_all) and self._pc_may_exceed_cap:
+                cap_min = min(c.capacity for c in self.caches.values())
+                too_big = (pc_a[i:j] > cap_min) & (kb > 0)
+                if too_big.any():
+                    b_big = i + int(np.argmax(too_big))
+            # per-cache insert positions + cumulative bytes, block-level;
+            # every phase boundary plans and applies against slices of them
+            d_poss: dict[int, np.ndarray] = {}
+            cum_inss: dict[int, np.ndarray] = {}
+            m_all = len(ins_pos_all)
+            ins_bytes_all = None
+            if m_all:
+                ins_d_all = dtns[ins_pos_all]
+                ins_bytes_all = pc_a[req_rep[ins_pos_all]]
+                for d in self.caches:
+                    dm = ins_d_all == d
+                    if dm.any():
+                        d_poss[d] = ins_pos_all[dm]
+                        cum_inss[d] = ins_bytes_all[dm].cumsum()
+            # per-key last in-block occurrence, one scatter per block (the
+            # ascending write order leaves the LAST position per key); a
+            # key is referenced at/after boundary s0 iff its entry clears
+            # gbase + s0 — replaces the per-boundary O(suffix) mark sweep
+            gbase = self._blk_gpos
+            self._blk_last[keys] = gbase + np.arange(ktot, dtype=np.int64)
+            self._blk_gpos = gbase + ktot
+            # block-level peer resolution against block-start presence:
+            # exact for every phase because mid-block evictions only take
+            # legal victims (no remaining in-block occurrence), so no
+            # still-queried chunk loses its snapshot presence, and the
+            # in-block first-missed union below covers earlier-phase
+            # inserts the same way per-phase presence reads would
+            acc_all = srcbw_all = ph_all = None
+            if m_all:
+                ph_all = np.zeros(ktot, np.int8)
+                ph_all[ins_pos_all] = 2
+                if self.cfg.enable_peer_cache and self.n_dtn > 1:
+                    ik = keys[ins_pos_all]
+                    idn = dtns[ins_pos_all]
+                    ireq = req_rep[ins_pos_all]
+                    iflat = flat[ins_pos_all]          # unique per (dtn, key)
+                    so = iflat.argsort()
+                    s_flat = iflat[so]
+                    s_req = ireq[so]
+                    ar = np.arange(m_all)
+                    # score = link bandwidth if the peer holds the chunk
+                    # else 0; argmax picks max-bw peer, lowest DTN id on
+                    # ties (reference iterates DTNs ascending keeping
+                    # strict improvements only — DTN 0 is the origin and
+                    # never a peer, so only rows 1.. are scored); in-block
+                    # earlier first-misses join via one batched
+                    # searchsorted over all peer rows at once
+                    ddv = np.arange(1, self.n_dtn, dtype=np.int64)
+                    f2 = ddv[:, None] * self._n_keys + ik   # (D-1, m)
+                    cand = self._present_flat[f2]
+                    bwm = self.bw[1:, idn]                  # (D-1, m)
+                    scores = cand * bwm
+                    loc = s_flat.searchsorted(f2.reshape(-1)).reshape(f2.shape)
+                    locc = np.minimum(loc, m_all - 1)
+                    inb = ((loc < m_all) & (s_flat[locc] == f2)
+                           & (s_req[locc] < ireq))
+                    np.maximum(scores, inb * bwm, out=scores)
+                    has1 = idn >= 1
+                    scores[idn[has1] - 1, ar[has1]] = 0.0
+                    src = np.argmax(scores, axis=0)
+                    srcbw_all = scores[src, ar]
+                    acc_all = srcbw_all > self.bw[0, idn]
+                    ph_all[ins_pos_all[acc_all]] = 1
+
+            def plan_b(r0: int):
+                """Plan the phase starting at request ``r0``: evictions are
+                allowed at the boundary as long as no victim's key is
+                referenced in the remaining suffix (else hit/peer decisions
+                would change).  Returns the furthest reachable request and
+                the per-cache eviction plans — in-block victims (records
+                committed by earlier phases whose keys fell out of the
+                suffix) interleave into each plan in LRU stamp order."""
+                b_next = b_big
+                plans: list[tuple] = []
+                if b_next == r0 or not d_poss:
+                    return b_next, plans
+                s0 = int(starts[r0 - i]) if r0 > i else 0
+                thresh = gbase + s0
                 for d, cache in self.caches.items():
-                    dm = ins_d == d
-                    if not dm.any():
+                    d_pos = d_poss.get(d)
+                    if d_pos is None:
                         continue
-                    d_pos = ins_pos[dm]
-                    cum_ins = ins_bytes[dm].cumsum()
+                    nin0 = int(d_pos.searchsorted(s0))
+                    if nin0 == len(d_pos):
+                        continue
+                    cum_d = cum_inss[d]
+                    base = int(cum_d[nin0 - 1]) if nin0 else 0
+                    total = int(cum_d[-1]) - base
                     room = cache.capacity - cache.used
-                    total = int(cum_ins[-1])
                     if total <= room:
                         continue
                     self._ctr["plan"] += 1
                     vk, cumf, ends = cache.plan_evictions_spec(
-                        total - room, self._blk_mark)
+                        total - room, self._blk_last, thresh)
                     clean = int(cumf[-1]) if len(cumf) else 0
                     if clean + room < total:
-                        over = cum_ins > room + clean
-                        p = int(d_pos[int(np.argmax(over))])
-                        b = min(b, int(req_rep[p]))
-                    ev_plans.append((cache, d_pos, cum_ins, room, vk, cumf,
-                                     ends))
-                # an insert larger than its cache is *skipped* by the
-                # reference, breaking the duplicate-hit invariant → blocker
-                if self._pc_may_exceed_cap:
-                    cap_min = min(c.capacity for c in self.caches.values())
-                    too_big = (pc_a[i:j] > cap_min) & (kb > 0)
-                    if too_big.any():
-                        b = min(b, i + int(np.argmax(too_big)))
-            if blocked_keys is not None:
-                self._blk_mark[blocked_keys] = False
-            if b > i:
-                p_end = ktot if b == j else int(starts[b - i])
-                for cache, d_pos, cum_ins, room, vk, cumf, ends in ev_plans:
-                    nin = int(d_pos.searchsorted(p_end))
-                    if nin == 0:
+                        over = cum_d[nin0:] - base > room + clean
+                        pp = int(d_pos[nin0 + int(np.argmax(over))])
+                        b_next = min(b_next, int(req_rep[pp]))
+                    plans.append((cache, d_pos, cum_d, nin0, base, room,
+                                  vk, cumf, ends))
+                return b_next, plans
+
+            r0 = i
+            b_next, plans = plan_b(i)
+            n_phase = 0
+            blocked = b_next == i
+            while not blocked:
+                # evict at the boundary for this phase's inserts, then
+                # commit the phase; both must land before the next
+                # boundary's plan reads the cache (used bytes, LRU stamps)
+                p0c = int(starts[r0 - i]) if r0 > i else 0
+                p1c = ktot if b_next == j else int(starts[b_next - i])
+                for (cache, d_pos, cum_d, nin0, base, room,
+                     vk, cumf, ends) in plans:
+                    nin = int(d_pos.searchsorted(p1c))
+                    if nin <= nin0:
                         continue
-                    need = int(cum_ins[nin - 1]) - room
+                    need = int(cum_d[nin - 1]) - base - room
                     if need <= 0:
                         continue
                     n_ev = int(cumf.searchsorted(need)) + 1
+                    ev0 = cache.evictions
                     cache.apply_evictions(vk, cumf, ends, n_ev)
-                self._block_commit(
-                    i, b, p_end, req_rep, keys, dtns, flat, true_hit,
-                    order_f, newrun, now_l, dtn_l)
-            if b < j:
+                    if r0 > i:
+                        self._ctr["invict"] += cache.evictions - ev0
+                self._block_commit(r0, b_next, p0c, p1c, req_rep, keys,
+                                   dtns, flat, true_hit, order_f, newrun,
+                                   ph_all)
+                n_phase += 1
+                if r0 > i:
+                    self._ctr["phases"] += 1
+                r0 = b_next
+                if r0 == j or n_phase >= _FUSED_PHASE_MAX:
+                    # block done — or the per-boundary suffix work has been
+                    # paid enough times: end the block cleanly at r0
+                    break
+                b_next, plans = plan_b(r0)
+                blocked = b_next == r0
+            if r0 > i:
+                # per-request outcome + per-DTN stat accounting for every
+                # committed phase, batched once per block (and before any
+                # scalar serve of a blocker, preserving origin-queue order)
+                p1c_f = ktot if r0 == j else int(starts[r0 - i])
+                self._block_account(i, r0, p1c_f, ins_pos_all, ins_bytes_all,
+                                    acc_all, srcbw_all, req_rep, dtns, now_a)
+            if blocked:
+                # the blocker request is served scalarly right away (exact
+                # for oversize inserts and eviction pressure alike)
                 self._ctr["trunc"] += 1
                 self._ctr["degen"] += 1
-                self._serve_event(b, now_l[b], dtn_l[b], False, False)
-                # capacity-bound truncation repeats at ~the same block size;
-                # regrow with 25% headroom (not 2x) so the next block's
-                # classification work is mostly kept, not re-truncated away
-                kept = b - i + 1
+                self._serve_event(r0, now_l[r0], dtn_l[r0], False, False)
+                kept = r0 - i + 1
                 block = min(65536, max(64, kept + (kept >> 2)))
-                degenerate = degenerate + 1 if b - i < 8 else 0
-                i = b + 1
+                degenerate = degenerate + 1 if r0 - i < 8 else 0
+                i = r0 + 1
             else:
-                block = min(65536, block * 2)
+                kept = r0 - i
+                i = r0
                 degenerate = 0
-                i = j
+                if n_phase > 12:
+                    # heavy phasing: each boundary pays an O(suffix) mark +
+                    # plan, so size the next block to land near ~8 phases
+                    block = min(65536, max(64, (kept * 8) // n_phase))
+                else:
+                    block = min(65536, block * 2)
+        # adaptive sizing survives streamed window edges
+        self._blk = block
+        self._degen = degenerate
 
-    def _block_commit(self, i: int, b: int, p_end: int, req_rep, keys, dtns,
-                      flat, true_hit, order_f, newrun, now_l,
-                      dtn_l) -> None:
-        """Retire requests [i, b) — their chunk positions [0, p_end) — in one
-        vectorized pass (hits, peer fetches, origin fetches, cache commit)."""
-        P = p_end
-        ktot = len(keys)
-        if P == 0:
+    def _block_commit(self, r0: int, b: int, P0: int, P1: int, req_rep,
+                      keys, dtns, flat, true_hit, order_f, newrun,
+                      ph_all) -> None:
+        """Commit one phase's cache records — requests [r0, b), chunk
+        positions [P0, P1) of the enclosing block.  Only cache state moves
+        here; per-request outcome and per-DTN stat accounting is batched
+        once per block in :meth:`_block_account` (block-level peer
+        resolution feeds both, see the exactness note in ``_run_static``).
+
+        The commit derives UNIQUE (dtn, key) records from a stable
+        flat-id sort: each run of equal flat ids yields its first
+        occurrence (insert decision + insert size) and last occurrence
+        (final recency).  A key never repeats inside one request, so
+        "last in reference order (hits, peer inserts, origin inserts per
+        request)" == "last by position" — ranks encode that order and
+        double as sparse LRU stamps (order matters, not contiguity).
+        Successive phase commits stay monotone automatically:
+        commit_unique advances the cache clock by ``rank_span`` per call."""
+        if P1 == P0:
             return
-        th = true_hit[:P]
-        rel = req_rep[:P] - np.int32(i)
-        R = b - i
+        ktot = len(keys)
+        R = b - r0
         pc_a = self._pc_arr
-        ins_pos = (~th).nonzero()[0]
-        m = len(ins_pos)
-        acc = np.zeros(m, np.bool_)
-        src_bw = None
-        ipc = pc_a[req_rep[ins_pos]] if m else None
-        if m and self.cfg.enable_peer_cache:
-            ik = keys[ins_pos]
-            idn = dtns[ins_pos]
-            ireq = req_rep[ins_pos]
-            # peer candidates: presence at request time = block-start
-            # snapshot ∪ chunks first-missed (hence inserted) by an earlier
-            # request of that DTN inside this block
-            cand = self._present2d[:, ik]              # (n_dtn, m) gather
-            iflat = flat[ins_pos]                      # unique per (dtn, key)
-            so = iflat.argsort()
-            s_flat = iflat[so]
-            s_req = ireq[so]
-            ar = np.arange(m)
-            # score = link bandwidth if the peer holds the chunk else 0;
-            # argmax picks max-bw peer, lowest DTN id on ties (reference
-            # iterates DTNs ascending keeping strict improvements only)
-            scores = cand * self.bw[:, idn]            # (n_dtn, m)
-            for dd in range(1, self.n_dtn):
-                f2 = dd * self._n_keys + ik
-                loc = s_flat.searchsorted(f2)
-                locc = np.minimum(loc, m - 1)
-                found = (loc < m) & (s_flat[locc] == f2)
-                inb = found & (s_req[locc] < ireq)
-                if inb.any():
-                    np.maximum(scores[dd], inb * self.bw[dd, idn],
-                               out=scores[dd])
-            scores[0] = 0.0
-            scores[idn, ar] = 0.0
-            src = np.argmax(scores, axis=0)
-            src_bw = scores[src, ar]
-            acc = src_bw > self.bw[0, idn]
-        # -- per-request outcome aggregation: hits per request = k - misses,
-        # so only the (small) insert set needs a bincount
-        kb_r = np.bincount(rel[ins_pos], minlength=R) if m else \
-            np.zeros(R, np.int64)
-        n_hit_r = self._k_arr[i:b] - kb_r
-        pc_r = self._pc_arr[i:b]
-        local_b_r = n_hit_r * pc_r
-        tra = n_hit_r * (pc_r / self._ulink)
-        accp = ins_pos[acc]
-        stillp = ins_pos[~acc]
-        if len(accp):
-            apc = ipc[acc]
-            peer_t_r = np.bincount(rel[accp], weights=apc / src_bw[acc],
-                                   minlength=R)
-            self._o_peer[i:b] = np.bincount(
-                rel[accp], weights=apc, minlength=R).astype(np.int64)
-            self._o_pt[i:b] = peer_t_r
-            tra = tra + peer_t_r
-        self._o_loc[i:b] = local_b_r
-        if len(stillp):
-            # origin queue state is inherently sequential; replay just these
-            # through the shared scalar submit (once per origin-bound
-            # request of the whole trace)
-            n_still_r = np.bincount(rel[stillp], minlength=R)
-            free = self.origin.free_at
-            ov = self.origin.overhead
-            bw0 = self._bw0
-            inf = float("inf")
-            pc_l = self._pc_l
-            submit = origin_submit
-            rels = np.nonzero(n_still_r)[0]
-            for rrel, ns in zip(rels.tolist(), n_still_r[rels].tolist()):
-                ridx = i + rrel
-                ob = pc_l[ridx] * ns
-                now = now_l[ridx]
-                bb = bw0[dtn_l[ridx]]
-                start, end = submit(free, ov, now,
-                                    ob / bb if bb > 0.0 else inf)
-                self._o_lat[ridx] = start - now
-                tra[rrel] += end - start
-                self._o_org[ridx] = ob
-        self._o_tra[i:b] = tra
-        # -- cache commit on UNIQUE (dtn, key) records, derived from the
-        # classification sort: each run of equal flat ids yields its first
-        # occurrence (insert decision + insert size) and last occurrence
-        # (final recency).  A key never repeats inside one request, so
-        # "last in reference order (hits, peer inserts, origin inserts per
-        # request)" == "last by position" — ranks encode that order and
-        # double as sparse LRU stamps (order matters, not contiguity).
-        if P == ktot:
+        if P0 == 0 and P1 == ktot:
             of, nr = order_f, newrun
         else:
-            of = order_f[order_f < P]
-            nr = np.empty(P, np.bool_)
+            # re-sorting the phase slice beats filtering the block sort:
+            # runs of equal flat ids restricted to [P0, P1) keep their
+            # relative (stable) order either way
+            of = P0 + flat[P0:P1].argsort(kind="stable")
+            nr = np.empty(len(of), np.bool_)
             nr[0] = True
             sfp = flat[of]
             np.not_equal(sfp[1:], sfp[:-1], out=nr[1:])
@@ -680,39 +733,113 @@ class VectorVDCSimulator:
         last_pos = of[last_mask]
         u_dtn = dtns[first_pos]                 # (dtn, key)-sorted already
         u_keys = keys[first_pos]
-        u_ins = ~th[first_pos]
+        u_ins = ~true_hit[first_pos]
         u_sz = pc_a[req_rep[first_pos]]
-        # ranks only materialize on the unique subset; a position's phase is
-        # 0 (hit) unless it is a single-occurrence insert
-        u_rank = rel[last_pos].astype(np.int64) * 3
-        if m:
-            ph = np.zeros(P, np.int8)
-            ph[stillp] = 2
-            if len(accp):
-                ph[accp] = 1
-            u_rank += ph[last_pos]
+        # ranks only materialize on the unique subset; a position's phase
+        # class is 0 (hit) / 1 (accepted peer) / 2 (origin), read from the
+        # block-level classification
+        u_rank = (req_rep[last_pos].astype(np.int64) - r0) * 3
+        if ph_all is not None:
+            u_rank += ph_all[last_pos]
         u_rank = (u_rank << 22) + last_pos
         rank_span = (3 * R + 3) << 22
+        # one composite (dtn, rank) sort orders every cache's slice at once
+        # (u_rank < 2^45: rank ≤ 3·65536+2 shifted 22); per-DTN segments are
+        # then contiguous views — no per-cache argsort or gather
+        go = ((u_dtn.astype(np.int64) << 45) + u_rank).argsort()
+        u_keys = u_keys[go]
+        u_rank = u_rank[go]
+        u_ins = u_ins[go]
+        u_sz = u_sz[go]
+        bounds = u_dtn.searchsorted(np.arange(self.n_dtn + 1))
+        for d, cache in self.caches.items():
+            s0, s1 = int(bounds[d]), int(bounds[d + 1])
+            if s1 > s0:
+                cache.commit_unique(u_keys[s0:s1], u_rank[s0:s1],
+                                    u_ins[s0:s1], u_sz[s0:s1], rank_span)
+
+    def _block_account(self, i: int, r_end: int, p1c: int, ins_pos_all,
+                       ins_bytes_all, acc_all, srcbw_all, req_rep, dtns,
+                       now_a) -> None:
+        """Per-request outcome aggregation and per-DTN lookup stats for the
+        committed request prefix [i, r_end) of one block — every committed
+        phase at once.  Exact at block level because the inputs (insert
+        set, peer accept/bandwidth) are themselves block-level and the
+        origin loop visits origin-bound requests in ascending order, the
+        same sequence the per-phase loops would concatenate to."""
+        R = r_end - i
+        pc_a = self._pc_arr
+        ni = int(ins_pos_all.searchsorted(p1c)) if len(ins_pos_all) else 0
+        if ni:
+            ins_pos = ins_pos_all[:ni]
+            ipc = ins_bytes_all[:ni]
+            rel_ins = req_rep[ins_pos].astype(np.int64) - i
+            acc = (acc_all[:ni] if acc_all is not None
+                   else np.zeros(ni, np.bool_))
+            # hits per request = k - misses, so only the (small) insert
+            # set needs a bincount
+            kb_r = np.bincount(rel_ins, minlength=R)
+        else:
+            kb_r = np.zeros(R, np.int64)
+        n_hit_r = self._k_arr[i:r_end] - kb_r
+        pc_r = pc_a[i:r_end]
+        local_b_r = n_hit_r * pc_r
+        tra = n_hit_r * (pc_r / self._ulink)
+        if ni and acc.any():
+            apc = ipc[acc]
+            rel_acc = rel_ins[acc]
+            peer_t_r = np.bincount(rel_acc, weights=apc / srcbw_all[:ni][acc],
+                                   minlength=R)
+            self._o_peer[i:r_end] = np.bincount(
+                rel_acc, weights=apc, minlength=R).astype(np.int64)
+            self._o_pt[i:r_end] = peer_t_r
+            tra = tra + peer_t_r
+        self._o_loc[i:r_end] = local_b_r
+        if ni and not acc.all():
+            # origin queue state is inherently sequential; replay just these
+            # through the shared scalar submit (once per origin-bound
+            # request of the whole trace), but batch every per-request
+            # array read/write around the loop — only (start, end) pairs
+            # are produced scalarly
+            n_still_r = np.bincount(rel_ins[~acc], minlength=R)
+            free = self.origin.free_at
+            ov = self.origin.overhead
+            submit = origin_submit
+            rels = np.nonzero(n_still_r)[0]
+            ridxs = i + rels
+            obv = pc_r[rels] * n_still_r[rels]
+            bbv = self._bw0a[self._dtn32[ridxs]]
+            durv = np.full(len(rels), np.inf)
+            # elementwise int64→float64 division matches the scalar
+            # ``ob / bb`` bit-for-bit; inf stands in where bw is zero
+            np.divide(obv, bbv, out=durv, where=bbv > 0.0)
+            nowv = now_a[ridxs]
+            starts = []
+            ends = []
+            for now, dur in zip(nowv.tolist(), durv.tolist()):
+                s, e = submit(free, ov, now, dur)
+                starts.append(s)
+                ends.append(e)
+            starts = np.array(starts)
+            ends = np.array(ends)
+            self._o_lat[ridxs] = starts - nowv
+            tra[rels] += ends - starts
+            self._o_org[ridxs] = obv
+        self._o_tra[i:r_end] = tra
         # per-DTN lookup stats from per-request totals minus the insert set
-        d_sl = self._dtn32[i:b]
-        k_sl = self._k_arr[i:b]
+        d_sl = self._dtn32[i:r_end]
+        k_sl = self._k_arr[i:r_end]
         cnt_d = np.bincount(d_sl, weights=k_sl, minlength=self.n_dtn)
-        pcs_d = np.bincount(d_sl, weights=k_sl * pc_a[i:b],
+        pcs_d = np.bincount(d_sl, weights=k_sl * pc_a[i:r_end],
                             minlength=self.n_dtn)
-        if m:
+        if ni:
             idn_all = dtns[ins_pos]
             mcnt_d = np.bincount(idn_all, minlength=self.n_dtn)
             mpcs_d = np.bincount(idn_all, weights=ipc,
                                  minlength=self.n_dtn)
         for d, cache in self.caches.items():
-            s0, s1 = u_dtn.searchsorted((d, d + 1))
-            if s1 > s0:
-                sl = slice(int(s0), int(s1))
-                o2 = u_rank[sl].argsort()
-                cache.commit_unique(u_keys[sl][o2], u_rank[sl][o2],
-                                    u_ins[sl][o2], u_sz[sl][o2], rank_span)
-            nm_d = int(mcnt_d[d]) if m else 0
-            mb = int(mpcs_d[d]) if m else 0
+            nm_d = int(mcnt_d[d]) if ni else 0
+            mb = int(mpcs_d[d]) if ni else 0
             cache.hits += int(cnt_d[d]) - nm_d
             cache.misses += nm_d
             cache.hit_bytes += int(pcs_d[d]) - mb
@@ -1280,13 +1407,18 @@ def _merge_key_runs(lo: np.ndarray,
 
 
 _FUSED_MAX_INCIDENCE = 1 << 21
+# hard cap on committed phases per block: each boundary pays an
+# O(suffix) key merge + plan, so past this the block ends cleanly and
+# the next block (adaptively resized) picks up where it left off
+_FUSED_PHASE_MAX = 64
 
 
 def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                         pos_a: np.ndarray, dtn_a: np.ndarray,
                         obj_a: np.ndarray, lo_a: np.ndarray,
                         hi_a: np.ndarray, pc_a: np.ndarray,
-                        ctr: dict | None = None):
+                        ctr: dict | None = None,
+                        blk_state: dict | None = None):
     """Fused replay of one request sequence (trace order) over per-DTN
     :class:`IntervalLRUState` caches.
 
@@ -1299,10 +1431,18 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
     - the sharded driver's per-DTN phase A (``log=True``): one DTN's
       subsequence, no peer logic, miss/insert/evict/split logs recorded on
       the state for phase B; returns ``None``.
+
+    Blocks under eviction pressure are replayed in PHASES: the fitting
+    prefix is committed, victims are evicted at the phase boundary, and
+    the same decomposition continues — so one block can span many
+    multiples of cache capacity (see the phase-loop section below for the
+    legal-victim invariant).  ``blk_state``, when given, carries the
+    adaptive block sizing across calls (the streamed driver passes a
+    persistent dict so window edges do not reset it).
     """
     n = len(pos_a)
     if ctr is None:
-        ctr = {"plan": 0, "trunc": 0, "degen": 0}
+        ctr = {"plan": 0, "trunc": 0, "degen": 0, "phases": 0, "invict": 0}
     n_dtn = max(states) + 1
     cap = next(iter(states.values())).capacity
     active = sorted(states)
@@ -1374,8 +1514,8 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
         pdt_loc[r] = peer_dt
 
     i = 0
-    blk = 512
-    degen = 0
+    blk = 512 if blk_state is None else blk_state.get("blk", 512)
+    degen = 0 if blk_state is None else blk_state.get("degen", 0)
     BIG = 1 << 62
     while i < n:
         if degen >= 4:
@@ -1392,9 +1532,10 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
         cap_nb = 0
         while True:
             # ---- elementary-cell decomposition of [i, j) ------------------
-            # computed ONCE per block; eviction-pressure truncation below
-            # only re-derives the plan inputs on the kept prefix (cells,
-            # snapshots and first-touch attribution are all prefix-stable)
+            # computed ONCE per block and reused by every phase (cells,
+            # snapshots and first-touch attribution are all prefix-stable,
+            # and the suffix-blocking invariant below keeps them exact
+            # across mid-block evictions)
             B = j - i
             lo = lo_a[i:j]; hi = hi_a[i:j]
             dt_b = dtn_a[i:j]; pc_b = pc_a[i:j]
@@ -1461,97 +1602,123 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
         ins_d = d_inc[ins_idx]
         ins_len = cell_len[ins_cell]
         ins_bytes = ins_len * pc_b[ins_inc]
-        # ---- eviction planning + prefix refinement ------------------------
-        # iterate to the same fixpoint as a full re-decomposition would:
-        # every refinement round re-plans on prefix-exact inputs (blocked
-        # key union, per-request insert bytes), and plan_evict_clean reuses
-        # its speculative plan across rounds, so a truncation costs
-        # O(prefix) instead of a fresh block scan
-        was_trunc = False
-        b_cur = B
-        evict_plan: dict[int, tuple] = {}
-        while True:
-            b_new = b_cur
-            over_big = (pc_b[:b_cur] > cap).nonzero()[0]
-            if len(over_big):
-                # the reference silently skips oversized inserts; serve the
-                # request scalarly so later touches of its keys stay misses
-                b_new = int(over_big[0])
-            evict_plan = {}
-            if b_new:
-                ni = int(ins_inc.searchsorted(b_new))
-                if ni:
-                    if b_new == B:
-                        us_c, ue_c = us, ue
-                    else:
-                        us_c, ue_c = _merge_key_runs(lo[:b_new], hi[:b_new])
-                    # the flat state takes the blocked key runs as arrays;
-                    # the list state wants Python lists (bisect)
-                    bs_l = ((us_c, ue_c) if flat
-                            else (us_c.tolist(), ue_c.tolist()))
-                    ii_ = ins_inc[:ni]
-                    ib_ = ins_bytes[:ni]
-                    id_ = ins_d[:ni]
-                    for d in active:
-                        m_ = id_ == d
-                        if not m_.any():
-                            continue
-                        st = states[d]
-                        bb = np.bincount(ii_[m_], weights=ib_[m_],
-                                         minlength=b_new).astype(np.int64)
-                        cum_d = bb.cumsum()
-                        room = st.capacity - st.used
-                        total = int(cum_d[-1])
-                        if total <= room:
-                            continue
-                        # contract: the result is only compared against the
-                        # byte shortfall (total - room) and clamped there —
-                        # plan_evict_clean may cap its answer at max_need,
-                        # and any overshoot past it must never change b_new
-                        ctr["plan"] += 1
-                        clean = st.plan_evict_clean(total - room, *bs_l)
-                        evict_plan[d] = (bb, cum_d)
-                        if total > room + clean:
-                            b_new = min(b_new, int(cum_d.searchsorted(
-                                room + clean, side="right")))
-            if b_new < b_cur:
-                was_trunc = True
-                ctr["trunc"] += 1
-                b_cur = b_new
-                if b_cur == 0:
-                    break
-                continue
-            break
-        if b_cur == 0:
+        # ---- phased eviction planning -------------------------------------
+        # Mid-block eviction phases replace the old truncation refinement:
+        # when the block's inserts exceed free room, the fitting prefix is
+        # committed as a PHASE, victims are evicted at the phase boundary,
+        # and the block continues on the same decomposition.  Legal-victim
+        # invariant: planning at boundary p0 blocks the GLOBAL key union of
+        # the remaining suffix [p0, B), so a key referenced at-or-after p0
+        # by any request is never evicted at any boundary <= p0.  Hence
+        # (a) the block-start snapshot + first-touch hit classification
+        # stays exact for the whole block, (b) the block-level peer holders
+        # stay exact (a queried cell belongs to the querying request's
+        # keys, hence is blocked at every earlier boundary for every DTN),
+        # and (c) each boundary eviction's FIFO prefix equals the
+        # reference's per-insert eviction sequence: plan_evict_clean stops
+        # at the first blocked record, and any record the reference had
+        # re-queued meanwhile (an in-phase re-touch) is blocked, so the
+        # consumed prefix is identical order-for-order.
+        bins: dict[int, np.ndarray] = {}
+        cum_ins: dict[int, np.ndarray] = {}
+        for d in active:
+            m_ = ins_d == d
+            if m_.any():
+                bb = np.bincount(ins_inc[m_], weights=ins_bytes[m_],
+                                 minlength=B).astype(np.int64)
+                bins[d] = bb
+                cum_ins[d] = bb.cumsum()
+        # the reference silently skips oversized inserts; the block ends at
+        # the first one and it is served scalarly so later touches of its
+        # keys stay misses
+        over_big = (pc_b > cap).nonzero()[0]
+        b_big = int(over_big[0]) if len(over_big) else B
+
+        def plan_boundary(p0: int) -> int:
+            """Furthest request the block can advance to from boundary
+            ``p0``: the longest prefix of the remaining suffix whose
+            per-DTN insert bytes fit free room plus clean (suffix-blocked)
+            evictable bytes, capped at the first oversized insert."""
+            b_new = b_big
+            if b_new == p0 or not cum_ins:
+                return b_new
+            if p0 == 0:
+                us_c, ue_c = us, ue
+            else:
+                us_c, ue_c = _merge_key_runs(lo[p0:], hi[p0:])
+            # the flat state takes the blocked key runs as arrays; the
+            # list state wants Python lists (bisect)
+            bs_l = ((us_c, ue_c) if flat
+                    else (us_c.tolist(), ue_c.tolist()))
+            for d in active:
+                cum_d = cum_ins.get(d)
+                if cum_d is None:
+                    continue
+                base = int(cum_d[p0 - 1]) if p0 else 0
+                total = int(cum_d[-1]) - base
+                if total <= 0:
+                    continue
+                st = states[d]
+                room = st.capacity - st.used
+                if total <= room:
+                    continue
+                # contract: the result is only compared against the byte
+                # shortfall (total - room) and clamped there —
+                # plan_evict_clean may cap its answer at max_need, and any
+                # overshoot past it must never change b_new
+                ctr["plan"] += 1
+                clean = st.plan_evict_clean(total - room, *bs_l)
+                if total > room + clean:
+                    b_new = min(b_new, p0 + int(cum_d[p0:].searchsorted(
+                        base + room + clean, side="right")))
+            return b_new
+
+        def evict_phase(p0: int, b1: int) -> None:
+            """Evict at boundary ``p0`` for the inserts of phase
+            ``[p0, b1)``, replaying the reference's cumulative per-request
+            arithmetic.  Chunks evicted at mid-block boundaries (p0 > 0)
+            are in-block victims: keys whose last remaining reference
+            preceded the boundary."""
+            inblock = p0 > 0
+            for d in active:
+                cum_d = cum_ins.get(d)
+                if cum_d is None:
+                    continue
+                base = int(cum_d[p0 - 1]) if p0 else 0
+                st = states[d]
+                ev0 = st.evictions
+                if log:
+                    # per-request calls: the evict/split logs need each
+                    # eviction stamped with its triggering request
+                    for r_loc in (p0
+                                  + bins[d][p0:b1].nonzero()[0]).tolist():
+                        cv = int(cum_d[r_loc]) - base
+                        if st.used + cv > st.capacity:
+                            st._evict_until(cv, int(pos_a[i + r_loc]))
+                else:
+                    # one call with the phase's final cumulative need: LRU
+                    # prefix consumption is monotone, so evicting for the
+                    # per-request cumulative values in sequence lands on
+                    # the same final prefix (t_now unread outside log mode)
+                    cv = int(cum_d[b1 - 1]) - base
+                    if cv > 0 and st.used + cv > st.capacity:
+                        st._evict_until(cv, int(pos_a[i + b1 - 1]))
+                if inblock:
+                    ctr["invict"] += st.evictions - ev0
+
+        b1 = plan_boundary(0)
+        if b1 == 0:
+            ctr["trunc"] += 1
             serve_scalar(i)
             i += 1
             degen += 1
             blk = max(256, blk >> 1)
             continue
-        j = i + b_cur
-        if b_cur < B:
-            # slice every per-incidence column to the kept prefix; the
-            # decomposition, snapshots and first-touch scatter are reused
-            e_i = int(cum[b_cur - 1])
-            B = b_cur
-            inc = inc[:e_i]; cell = cell[:e_i]; d_inc = d_inc[:e_i]
-            hit = hit[:e_i]
-            ni = int(ins_inc.searchsorted(b_cur))
-            ins_idx = ins_idx[:ni]; ins_inc = ins_inc[:ni]
-            ins_cell = ins_cell[:ni]; ins_d = ins_d[:ni]
-            ins_len = ins_len[:ni]; ins_bytes = ins_bytes[:ni]
-            dt_b = dt_b[:b_cur]; pc_b = pc_b[:b_cur]
-        # ---- last-touch attribution (kept prefix) -------------------------
-        last2 = np.full((n_dtn, M), -1, np.int64)
-        # forward scatter, last-wins: each (DTN, cell)'s last toucher
-        last2[d_inc, cell] = inc
-        duniq: dict[int, tuple] = {}
-        for d in active:
-            row = last2[d]
-            uc = (row >= 0).nonzero()[0]  # ascending touched cells
-            if len(uc):
-                duniq[d] = (uc, first2[d, uc], row[uc])
         # ---- peer resolution for the block's insert cells -----------------
+        # block-level, BEFORE any commit or eviction: resolved per insert
+        # column from the block-start snapshot + first-touch attribution,
+        # which the suffix-blocking invariant keeps exact for every phase;
+        # the per-request accounting below filters to the committed extent
         n_ins = len(ins_idx)
         acc2 = None
         acc = np.zeros(n_ins, bool)
@@ -1560,7 +1727,8 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             for d2 in active:
                 # a DTN holds a cell at serve time iff it was present at
                 # block start or an earlier in-block request of that DTN
-                # touched it (hit or insert — nothing in-block is evicted)
+                # touched it (hit or insert — suffix blocking guarantees
+                # no boundary eviction ever removes a still-queried cell)
                 holders[d2] = (snap[d2, ins_cell]
                                | (first2[d2, ins_cell] < ins_inc))
             # own-DTN entries are False by construction (the first toucher
@@ -1569,65 +1737,12 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                 bw[:, ins_d], holders)
             acc2 = np.zeros((n_dtn, M), bool)
             acc2[ins_d[acc], ins_cell[acc]] = True
-        # ---- per-request / per-DTN accounting -----------------------------
-        hit_i = hit.nonzero()[0]
-        hlen = cell_len[cell[hit_i]]
-        nh_b = np.bincount(inc[hit_i], weights=hlen,
-                           minlength=B).astype(np.int64)
-        nm_b = np.bincount(ins_inc, weights=ins_len,
-                           minlength=B).astype(np.int64)
-        for d in active:
-            md = dt_b == d
-            if not md.any():
-                continue
-            st = states[d]
-            st.hits += int(nh_b[md].sum())
-            st.hit_bytes += int((nh_b[md] * pc_b[md]).sum())
-            st.misses += int(nm_b[md].sum())
-            st.miss_bytes += int((nm_b[md] * pc_b[md]).sum())
-        if not log:
-            nh_loc[i:j] = nh_b
-            if n_ins:
-                na = np.bincount(ins_inc[acc], weights=ins_len[acc],
-                                 minlength=B).astype(np.int64)
-                acc_loc[i:j] = na
-                still_loc[i:j] = nm_b - na
-                if acc.any():
-                    pdt_loc[i:j] = np.bincount(
-                        ins_inc[acc],
-                        weights=ins_len[acc]
-                        * (pc_b[ins_inc[acc]] / best_bw[acc]),
-                        minlength=B)
-                    peer_ranges.extend(coalesce_peer_ranges(
-                        pos_a[i + ins_inc[acc]], ins_d[acc], src[acc],
-                        C[ins_cell[acc]], C[ins_cell[acc] + 1]))
-        # ---- evictions: replay the reference's cumulative arithmetic ------
-        for d, (bb, cum_d) in evict_plan.items():
-            st = states[d]
-            ev = st._evict_until
-            if log:
-                # per-request calls: the evict/split logs need each
-                # eviction stamped with its triggering request
-                for r_loc in bb.nonzero()[0].tolist():
-                    cv = int(cum_d[r_loc])
-                    if st.used + cv > st.capacity:
-                        ev(cv, int(pos_a[i + r_loc]))
-            else:
-                # one call with the block's final cumulative need: LRU
-                # prefix consumption is monotone, so evicting for the
-                # per-request cumulative values in sequence lands on the
-                # same final prefix (and t_now is unread outside log mode)
-                cv = int(cum_d[-1])
-                if st.used + cv > st.capacity:
-                    ev(cv, int(pos_a[j - 1]))
-        # ---- run-merge commits --------------------------------------------
-        for d in active:
-            got = duniq.get(d)
-            if got is None:
-                continue
-            uc, fi, la = got
-            st = states[d]
-            ins_flag = ~snap[d, uc]           # first touch was a miss
+
+        def commit_one(st, d, uc, fi, la, ins_flag):
+            """Commit one DTN's merged runs for one phase: ``uc`` the
+            touched cells (ascending), ``fi``/``la`` the phase's first and
+            last toucher per cell, ``ins_flag`` the cells whose insert this
+            phase performs."""
             size_recs: list = []
             z_parts = None
             if ins_flag.any():
@@ -1646,7 +1761,7 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                     # global mode: size records only feed the size map and
                     # byte accounting, both invariant under merging
                     # contiguous equal-size runs — and per-object chunk
-                    # sizes rarely change, so this collapses a block's
+                    # sizes rarely change, so this collapses a phase's
                     # inserts to ~one splice per object
                     ipc = pc_b[ifi]
                     iob = obj_a[i + ifi]
@@ -1669,13 +1784,12 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
             # re-touched cell ends as a plain hit touch of its last toucher
             single = ins_flag & (fi == la)
             if acc2 is not None:
-                phase = np.where(single,
-                                 np.where(acc2[d, uc], 1, 2), 0)
+                ph = np.where(single, np.where(acc2[d, uc], 1, 2), 0)
             else:
-                phase = np.where(single, 2, 0)
+                ph = np.where(single, 2, 0)
             src_rec = np.where(single, pos_a[i + la], -1)
-            o3 = np.lexsort((uc, phase, la))
-            uc3 = uc[o3]; ph3 = phase[o3]
+            o3 = np.lexsort((uc, ph, la))
+            uc3 = uc[o3]; ph3 = ph[o3]
             la3 = la[o3]; sr3 = src_rec[o3]
             brk = np.empty(len(uc3), bool)
             brk[0] = True
@@ -1720,24 +1834,162 @@ def _fused_block_replay(states: dict, bw, enable_peer: bool, log: bool,
                     obj_a[i + la3[gs]].tolist(), C[uc3[gs]].tolist(),
                     C[uc3[ge] + 1].tolist(), sr3[gs].tolist()))
                 st.commit_block(size_recs, rec_recs, r_grp)
+
+        def commit_phase(p0: int, b1: int) -> None:
+            """Commit phase ``[p0, b1)``: group its incidence slice by
+            (DTN, cell) — the stable lexsort keeps touchers ascending
+            inside each group — and commit every DTN's merged runs with
+            per-phase first/last attribution."""
+            e0 = int(cum[p0 - 1]) if p0 else 0
+            e1 = int(cum[b1 - 1])
+            if e1 == e0:
+                return
+            cell_p = cell[e0:e1]
+            d_p = d_inc[e0:e1]
+            o_s = np.lexsort((cell_p, d_p))
+            ds = d_p[o_s]
+            cs = cell_p[o_s]
+            iq = inc[e0:e1][o_s]
+            nrun = np.empty(len(ds), bool)
+            nrun[0] = True
+            nrun[1:] = (ds[1:] != ds[:-1]) | (cs[1:] != cs[:-1])
+            g0 = nrun.nonzero()[0]
+            g1 = np.append(g0[1:], len(ds)) - 1
+            ud = ds[g0]
+            for d in active:
+                s0, s1 = np.searchsorted(ud, (d, d + 1))
+                if s1 == s0:
+                    continue
+                gg0 = g0[s0:s1]
+                gg1 = g1[s0:s1]
+                uc = cs[gg0]
+                fi = iq[gg0]
+                la = iq[gg1]
+                # a cell is this phase's insert iff its block-level first
+                # touch lands in this phase and missed the block snapshot;
+                # cells inserted by an earlier phase and re-touched here
+                # commit as plain hit touches
+                ins_flag = (~snap[d, uc]) & (first2[d, uc] == fi)
+                commit_one(states[d], d, uc, fi, la, ins_flag)
+
+        # ---- phase loop ---------------------------------------------------
+        # Per-phase commits are mandatory: the next boundary's eviction
+        # walks the FIFO, so every cell touched in a committed phase must
+        # carry its phase-last recency stamp before that walk — an
+        # uncommitted touch would leave a pre-block record at the FIFO
+        # front that the reference had already re-queued to the back.
+        was_trunc = False
+        n_phase = 0
+        if b1 == B:
+            # single full-block phase (no pressure, or the clean evictable
+            # prefix covers the whole block): scatter-based last-touch
+            # attribution, one commit per DTN
+            evict_phase(0, B)
+            last2 = np.full((n_dtn, M), -1, np.int64)
+            # forward scatter, last-wins: each (DTN, cell)'s last toucher
+            last2[d_inc, cell] = inc
+            for d in active:
+                row = last2[d]
+                uc = (row >= 0).nonzero()[0]  # ascending touched cells
+                if len(uc):
+                    commit_one(states[d], d, uc, first2[d, uc], row[uc],
+                               ~snap[d, uc])
+            B_final = B
+            n_phase = 1
+        else:
+            p0 = 0
+            b_next = b1
+            while True:
+                evict_phase(p0, b_next)
+                commit_phase(p0, b_next)
+                n_phase += 1
+                if p0:
+                    ctr["phases"] += 1
+                p0 = b_next
+                if p0 == B or n_phase >= _FUSED_PHASE_MAX:
+                    # block done — or the per-boundary suffix work has been
+                    # paid enough times: end the block cleanly here and let
+                    # the next (adaptively resized) block pick up
+                    break
+                b_next = plan_boundary(p0)
+                if b_next == p0:
+                    # no progress possible: the boundary request is the
+                    # blocker (oversized insert or an empty clean prefix)
+                    was_trunc = True
+                    break
+            B_final = p0
+        # ---- per-request / per-DTN accounting (committed extent) ----------
+        j = i + B_final
+        if B_final < B:
+            e_i = int(cum[B_final - 1])
+            B = B_final
+            inc = inc[:e_i]; cell = cell[:e_i]
+            hit = hit[:e_i]
+            ni = int(ins_inc.searchsorted(B_final))
+            ins_inc = ins_inc[:ni]; ins_cell = ins_cell[:ni]
+            ins_d = ins_d[:ni]; ins_len = ins_len[:ni]
+            acc = acc[:ni]
+            if acc2 is not None:
+                src = src[:ni]; best_bw = best_bw[:ni]
+            dt_b = dt_b[:B_final]; pc_b = pc_b[:B_final]
+            n_ins = ni
+        hit_i = hit.nonzero()[0]
+        hlen = cell_len[cell[hit_i]]
+        nh_b = np.bincount(inc[hit_i], weights=hlen,
+                           minlength=B).astype(np.int64)
+        nm_b = np.bincount(ins_inc, weights=ins_len,
+                           minlength=B).astype(np.int64)
+        for d in active:
+            md = dt_b == d
+            if not md.any():
+                continue
+            st = states[d]
+            st.hits += int(nh_b[md].sum())
+            st.hit_bytes += int((nh_b[md] * pc_b[md]).sum())
+            st.misses += int(nm_b[md].sum())
+            st.miss_bytes += int((nm_b[md] * pc_b[md]).sum())
+        if not log:
+            nh_loc[i:j] = nh_b
+            if n_ins:
+                na = np.bincount(ins_inc[acc], weights=ins_len[acc],
+                                 minlength=B).astype(np.int64)
+                acc_loc[i:j] = na
+                still_loc[i:j] = nm_b - na
+                if acc.any():
+                    pdt_loc[i:j] = np.bincount(
+                        ins_inc[acc],
+                        weights=ins_len[acc]
+                        * (pc_b[ins_inc[acc]] / best_bw[acc]),
+                        minlength=B)
+                    peer_ranges.extend(coalesce_peer_ranges(
+                        pos_a[i + ins_inc[acc]], ins_d[acc], src[acc],
+                        C[ins_cell[acc]], C[ins_cell[acc] + 1]))
         i = j
         if was_trunc:
+            ctr["trunc"] += 1
             # the blocker request is served scalarly right away (exact for
             # oversize inserts and eviction pressure alike)
             if i < n:
                 serve_scalar(i)
                 i += 1
-            degen += 1 if b_cur < 8 else 0
+            degen += 1 if B_final < 8 else 0
             blk = max(256, blk >> 1)
         else:
             degen = 0
-            if cap_nb:
+            if n_phase > 12:
+                # heavy phasing: each boundary pays an O(suffix) key merge
+                # and plan, so size the next block to land near ~8 phases
+                blk = max(256, min(65536, (B_final * 8) // n_phase))
+            elif cap_nb:
                 # the incidence cap cut this block down from ``blk``; size
                 # the next block near the achieved cut so its first
                 # decomposition pass is not paid at many times the kept size
                 blk = max(256, min(65536, cap_nb + (cap_nb >> 2)))
             else:
                 blk = min(blk << 1, 65536)
+    if blk_state is not None:
+        blk_state["blk"] = blk
+        blk_state["degen"] = degen
     if log:
         return None
     return nh_loc, acc_loc, pdt_loc, still_loc, peer_ranges
@@ -2026,6 +2278,9 @@ class IntervalVDCSimulator(VectorVDCSimulator):
         origin_requests = 0
         n_total = 0
         pos0 = 0
+        # adaptive block sizing persists across window edges, so a churn
+        # regime discovered in one window is not re-learned in the next
+        blk_state: dict = {}
         for window in source.windows():
             arr = requests_to_arrays(window)
             n_req = len(arr)
@@ -2066,7 +2321,8 @@ class IntervalVDCSimulator(VectorVDCSimulator):
                 nh_l, acc_l, pdt_l, still_l, _ = _fused_block_replay(
                     states, self.bw, cfg.enable_peer_cache, False,
                     pos0 + live, dtn_arr[live], arr.obj[live], lo_a,
-                    lo_a + k_eff[live], per_chunk[live], ctr=self._ctr)
+                    lo_a + k_eff[live], per_chunk[live], ctr=self._ctr,
+                    blk_state=blk_state)
                 nh_full[live] = nh_l
                 o_peer[live] = acc_l * per_chunk[live]
                 o_pt[live] = pdt_l
@@ -2135,6 +2391,8 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             evict_plan_calls=self._ctr["plan"],
             block_truncations=self._ctr["trunc"],
             degenerate_serves=self._ctr["degen"],
+            block_phases=self._ctr["phases"],
+            inblock_victims=self._ctr["invict"],
         )
 
     # -- global fused block replay (coarse-regime default) -------------------
@@ -2374,6 +2632,8 @@ class IntervalVDCSimulator(VectorVDCSimulator):
             evict_plan_calls=self._ctr["plan"],
             block_truncations=self._ctr["trunc"],
             degenerate_serves=self._ctr["degen"],
+            block_phases=self._ctr["phases"],
+            inblock_victims=self._ctr["invict"],
         )
 
 

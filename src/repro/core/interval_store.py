@@ -900,6 +900,13 @@ class FlatIntervalState:
         p = self._plan
         if p is not None:
             if p.total >= max_need:
+                # deliberately no fgen check: plan_evict_clean consumes
+                # only key runs + byte sums (vs/ve/cumb/segb against the
+                # CURRENT size map), never the FIFO positions that a
+                # compaction renumbers, and ``_evict_until`` re-validates
+                # ``p.fgen`` itself before consuming the plan.  Phased
+                # block replay makes this branch hot: phase commits can
+                # compact the FIFO (fgen bump) between boundary plans.
                 return p
             if p.fgen == self._fgen:
                 if p.pos >= self._ft:
@@ -1456,6 +1463,31 @@ class FlatIntervalState:
     def _insert_with_evict(self, obj: int, miss_runs: list, size: int,
                            req_pos: int) -> None:
         log = self._log
+        nm = sum(b - a for a, b in miss_runs)
+        if not log and nm * size <= self.capacity:
+            # churn-tail fast path (the degenerate scalar serves): ONE
+            # batched eviction for the whole insert volume, then one splice
+            # pair per run — exact because LRU prefix consumption is
+            # monotone (evicting for the per-chunk cumulative needs in
+            # sequence lands on the same final prefix with the same final
+            # split arithmetic), and no chunk of this insert can become
+            # its own victim when the volume fits capacity.  Log mode keeps
+            # the reference's per-chunk evict-ahead so the evict/split logs
+            # record each intermediate split for the phase-B audit.
+            if self.used + nm * size > self.capacity:
+                self._evict_until(nm * size, req_pos)
+            for a, b in miss_runs:
+                rid = self._new_rid()
+                self._fifo_push(rid, a, b, req_pos)
+                self._splice(False, a, b, [a], [b], [rid])
+                self._splice(True, a, b, [a], [b], [size])
+            self.used += nm * size
+            self.n_live += nm
+            self.inserted_bytes += nm * size
+            return
+        # oversize wrap: the run cannot fit at once, so later chunks evict
+        # earlier chunks of the same insert (reference chunk-by-chunk
+        # evict-ahead semantics)
         for a, b in miss_runs:
             j = a
             while j < b:

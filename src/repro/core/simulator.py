@@ -250,6 +250,12 @@ class SimResult:
     evict_plan_calls: int = 0
     block_truncations: int = 0
     degenerate_serves: int = 0
+    # Phased block replay (ISSUE 10): mid-block eviction phases committed
+    # beyond each block's first, and chunks evicted at those mid-block
+    # phase boundaries (in-block victims — keys whose last remaining
+    # reference preceded the boundary).
+    block_phases: int = 0
+    inblock_victims: int = 0
 
     def outcome_totals(self) -> OutcomeAggregate:
         """Outcome column totals, independent of how the trace was replayed

@@ -231,6 +231,125 @@ def test_fuzz_thrash_regime(strategy):
                 f"{strategy}: {e}") from e
 
 
+PHASED_EXAMPLES = 10
+
+
+def gen_phased_scenario(rng: random.Random):
+    """Scenario whose total insert volume exceeds cache capacity by a drawn
+    2-8x factor: the fused engines must span blocks with mid-block eviction
+    phases (the phased block replay) instead of collapsing to request-sized
+    truncated blocks, while the drawn range overlaps exercise the
+    legal-victim invariant (a key re-referenced later in the block must
+    never be evicted at an earlier phase boundary)."""
+    grid = ObjectGrid(1, rng.randint(1, 2))
+    n = rng.randint(36, 90)
+    reqs = []
+    ts = 0.0
+    total = 0
+    for _ in range(n):
+        ts += rng.uniform(0.5, 60.0)
+        tr_start = rng.uniform(0.0, 4000.0)
+        width = rng.uniform(30.0, 600.0)
+        if rng.random() < 0.4:
+            # live-tail edge case under pressure
+            tr_start = max(0.0, ts - width * rng.uniform(0.2, 1.5))
+        size = rng.randint(1, 24) * _U
+        total += size
+        reqs.append(Request(
+            ts=ts,
+            user_id=rng.randint(1, 3),
+            obj=rng.randint(0, grid.n_objects - 1),
+            tr_start=tr_start,
+            tr_end=tr_start + width,
+            size_bytes=size,
+            continent=rng.randint(0, 2),
+        ))
+    cfg_kw = dict(
+        cache_policy="lru",
+        cache_bytes=max(256 << 10, total // rng.randint(2, 8)),
+        chunk_seconds=rng.choice([7.0, 30.0, 120.0]),
+        stream_rate_bytes_per_s=8e3,
+        enable_peer_cache=rng.random() < 0.75,
+        origin_latency_s=rng.choice([0.0, 2.0]),
+        bandwidth_gbps=gen_bandwidth(rng),
+        traffic_scale=1.0,
+    )
+    return grid, RequestList(reqs), cfg_kw
+
+
+@pytest.mark.parametrize("strategy", ("cache_only", "md1"))
+def test_fuzz_phased_eviction(strategy):
+    """Derandomized phased-eviction sweep: capacity drawn below the trace's
+    insert volume so blocks are forced to span 2-8x the cache.  LRU is
+    pinned, so the cache_only leg also sweeps the sharded
+    (``interval_shards=2``) phased route via :func:`check_strategy`."""
+    for i in range(PHASED_EXAMPLES):
+        rng = random.Random((FUZZ_SEED, "phased", strategy, i).__repr__())
+        grid, trace, cfg_kw = gen_phased_scenario(rng)
+        window = rng.choice((5, 9, 17))
+        try:
+            check_strategy(strategy, grid, trace, cfg_kw, window=window)
+        except AssertionError as e:
+            raise AssertionError(
+                f"phased scenario {i} (seed base {FUZZ_SEED}) of strategy "
+                f"{strategy}: {e}") from e
+
+
+def _churn_trace(n_ranges: int, rereference: bool):
+    """13+ disjoint 8-chunk ranges over one object, 1 MiB per chunk; with
+    ``rereference`` the final request re-touches the first range's keys."""
+    cs = 60.0
+    reqs = []
+    ts = 0.0
+
+    def add(lo_chunk: int, n_chunks: int) -> None:
+        nonlocal ts
+        ts += 10_000.0      # keep every range safely in the past (no clamp)
+        reqs.append(Request(
+            ts=ts, user_id=1, obj=0,
+            tr_start=lo_chunk * cs, tr_end=(lo_chunk + n_chunks) * cs,
+            size_bytes=n_chunks * _U, continent=0,
+        ))
+
+    for k in range(n_ranges):
+        add(8 * k, 8)
+    if rereference:
+        add(0, 8)
+    return ObjectGrid(1, 1), RequestList(reqs)
+
+
+_CHURN_CFG = dict(cache_policy="lru", cache_bytes=8 * _U, chunk_seconds=60.0,
+                  stream_rate_bytes_per_s=8e3, enable_peer_cache=False,
+                  origin_latency_s=0.0, traffic_scale=1.0)
+
+
+def test_phased_block_spans_capacity():
+    """Pure-churn block (13 disjoint capacity-sized ranges, no re-touch):
+    the phased engines must replay it as ONE block with mid-block eviction
+    phases — visible in the new telemetry — and match the reference."""
+    grid, trace = _churn_trace(13, rereference=False)
+    ref = run_strategy("cache_only", trace, grid, SimConfig(**_CHURN_CFG),
+                       None, engine="reference")
+    want = _int_counters(ref)
+    for engine in ("interval", "vector"):
+        res = run_strategy("cache_only", trace, grid,
+                           SimConfig(**_CHURN_CFG), None, engine=engine)
+        assert _int_counters(res) == want, engine
+        assert res.block_phases >= 4, (engine, res.block_phases)
+        assert res.inblock_victims >= 4, (engine, res.inblock_victims)
+
+
+def test_inblock_victim_rereference():
+    """In-block-victim re-reference regression: the first range's keys are
+    re-touched by the LAST request of the block, so at every earlier phase
+    boundary they are ineligible victims (the suffix-blocked plan must
+    skip them), even though the reference — with no lookahead — evicts
+    them and serves the re-touch as a miss.  Exact counter equality across
+    every engine and route is the bar."""
+    grid, trace = _churn_trace(13, rereference=True)
+    check_strategy("cache_only", grid, trace, _CHURN_CFG, window=5)
+
+
 # ---------------------------------------------------------------------------
 # hypothesis-driven adaptive profile (CI fuzz job)
 # ---------------------------------------------------------------------------

@@ -423,6 +423,89 @@ def test_plan_invalidated_by_mid_block_commit(cls, log):
 
 @pytest.mark.parametrize("cls", _STATES)
 @pytest.mark.parametrize("log", [True, False])
+def test_plan_invalidated_by_inblock_victim_restab(cls, log):
+    """Phased-replay hazard (ISSUE 10): a boundary plan may list records
+    that were committed by EARLIER PHASES of the same block — in-block
+    victims, entered via ``commit_block`` rather than ``serve``.  A later
+    phase's commit that re-stamps such a victim must invalidate the plan
+    exactly like the pre-block record-stab rule above; the stab guard must
+    not depend on how the victim record was created.  Transparency twin
+    proves the whole sequence."""
+    planned = cls(100, log_events=log)
+    twin = cls(100, log_events=log)
+    # phase-1-style commit: A, B, C enter through the fused commit path
+    # (in-block records), not through serve
+    recs_z1 = [(0, 0, 30, 0, 1), (0, 100, 130, 1, 1), (0, 200, 230, 2, 1)]
+    recs_r1 = [(0, 0, 30, 0), (0, 100, 130, 1), (0, 200, 230, 2)]
+    for st in (planned, twin):
+        st.commit_block(recs_z1, recs_r1)
+    assert planned.used == 90
+    # phase boundary: plan 40 clean bytes — victim prefix is in-block A
+    # plus the head of in-block B
+    clean = planned.plan_evict_clean(40, [], [])
+    assert clean == 40 and planned._plan is not None
+    # phase-2 commit re-touches [5, 25) inside in-block victim A
+    recs_z2 = [(0, 300, 310, 3, 1)]
+    recs_r2 = [(0, 5, 25, 3), (0, 300, 310, 3)]
+    for st in (planned, twin):
+        st.commit_block(recs_z2, recs_r2)
+    assert planned._plan is None          # stab guard fired on in-block A
+    # pressure: the A remnants (10) + B (30) must go in true LRU order
+    for st in (planned, twin):
+        st.serve(4, 0, 400, 440, 1)
+    assert planned.coverage_runs(0, 0, 30) == [(5, 25)]
+    assert _state_digest(planned) == _state_digest(twin)
+    planned.check_invariants()
+    twin.check_invariants()
+
+
+def test_flat_plan_fgen_stale_early_return_is_safe():
+    """``FlatIntervalState.get_evict_plan`` returns a cached plan that
+    already covers the queried need WITHOUT checking ``fgen`` (see the
+    comment at that early return): ``clean_before`` reads only the victim
+    key runs against the *current* size map, and ``_evict_until``
+    re-validates ``fgen`` before consuming.  Phased replay makes this path
+    hot — phase commits compact the FIFO (fgen bump) between boundary
+    plans — so pin the safety argument: plan, force a real compaction via
+    recency churn on non-victims, re-query through the stale-fgen early
+    return, then evict, all digest-identical to a plan-free twin."""
+    planned = FlatIntervalState(10_000, log_events=False)
+    twin = FlatIntervalState(10_000, log_events=False)
+    for st in (planned, twin):
+        for k in range(40):
+            st.serve(k, 0, 10 * k, 10 * k + 10, 1)   # 400 chunks, no evict
+    assert planned.plan_evict_clean(50, [], []) == 50
+    p = planned._plan
+    assert p is not None
+    g0 = planned._fgen
+    # churn recency on records past the plan's key span (kmax) only, so
+    # the stab guard never fires — until the FIFO array fills and a
+    # compaction renumbers positions
+    first_safe = -(-int(p.kmax) // 10)    # record index just past kmax
+    assert first_safe < 40
+    step = 0
+    while planned._fgen == g0:
+        assert step < 5000, "compaction never triggered"
+        idx = first_safe + (step % (40 - first_safe))
+        for st in (planned, twin):
+            st.lookup_touch(0, 10 * idx, 10 * idx + 10, 1)
+        step += 1
+    assert planned._plan is p             # plan survived with stale fgen
+    # covered-need query takes the fgen-less early return; its clean-byte
+    # answer must agree with the twin's fresh scan
+    assert planned.plan_evict_clean(40, [], []) == \
+        twin.plan_evict_clean(40, [], [])
+    # real pressure: _evict_until sees p.fgen != self._fgen, drops the
+    # stale plan and walks fresh — digests must stay identical
+    for st in (planned, twin):
+        st.serve(9000, 0, 1 << 20, (1 << 20) + 9_700, 1)
+    assert _state_digest(planned) == _state_digest(twin)
+    planned.check_invariants()
+    twin.check_invariants()
+
+
+@pytest.mark.parametrize("cls", _STATES)
+@pytest.mark.parametrize("log", [True, False])
 @pytest.mark.parametrize("seed", range(4))
 def test_plan_is_semantically_inert_randomized(cls, log, seed):
     """Seeded transparency fuzz: interleave speculative plans (on one state
